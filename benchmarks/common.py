@@ -1,0 +1,54 @@
+"""Shared benchmark utilities.
+
+Two scales:
+  * ``small`` (default): CI-friendly stand-ins with the same einsum structure
+    so ``python -m benchmarks.run`` finishes in minutes on one CPU core.
+  * ``paper``: the full GPT-3 6.7B / MobileNetV3 shapes from §VI-A; use
+    ``python -m benchmarks.run --scale paper`` (minutes-to-hours, logged in
+    EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict
+
+from repro.core.einsum import Einsum
+from repro.core.presets import (gpt3_einsums, mobilenetv3_einsums, nvdla_like,
+                                small_matmul_suite, tpu_v4i_like)
+
+
+def workloads(scale: str) -> Dict[str, tuple]:
+    """name -> (einsum, arch)"""
+    out: Dict[str, tuple] = {}
+    if scale == "paper":
+        for name, ein in gpt3_einsums().items():
+            out[name] = (ein, tpu_v4i_like())
+        for name, ein in mobilenetv3_einsums().items():
+            out[name] = (ein, nvdla_like())
+    else:
+        suite = small_matmul_suite()
+        for name in ("Q", "QK", "FFA"):
+            out[name] = (suite[name], tpu_v4i_like())
+        for name in ("P0", "D0"):
+            out[name] = (suite[name], nvdla_like())
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+_TCM_CACHE: Dict[tuple, tuple] = {}
+
+
+def cached_tcm(name: str, scale: str, ein, arch):
+    """Memoized tcm_map so benchmarks sharing workloads don't re-search."""
+    from repro.core.mapper import tcm_map
+
+    key = (name, scale)
+    if key not in _TCM_CACHE:
+        t0 = time.perf_counter()
+        best, stats = tcm_map(ein, arch)
+        _TCM_CACHE[key] = (best, stats, time.perf_counter() - t0)
+    return _TCM_CACHE[key]

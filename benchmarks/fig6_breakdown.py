@@ -1,0 +1,34 @@
+"""Paper Fig. 6: search-size reduction by each optimization (cumulative OOM).
+
+Decomposition (log10, cumulative as in the paper's bars):
+  dataflow_red   = |DF| pruning          = log10_total - log10_after_df
+  tileshape_red  = loop (tile-shape) pruning on top = after_df - after_loop
+  partial_red    = partial-tile-shape pruning       = after_loop - evaluated
+"""
+from __future__ import annotations
+
+import time
+
+from .common import cached_tcm, csv_line, workloads
+
+
+def run(scale: str = "small") -> list:
+    rows = []
+    for name, (ein, arch) in workloads(scale).items():
+        _, s, dt = cached_tcm(name, scale, ein, arch)
+        df_red = s.log10_total - s.log10_after_df_pruning
+        ts_red = s.log10_after_df_pruning - s.log10_after_loop_pruning
+        pt_red = s.log10_after_loop_pruning - s.log10_evaluated
+        rows.append({
+            "einsum": name,
+            "dataflow_red_oom": round(df_red, 1),
+            "tileshape_red_oom": round(ts_red, 1),
+            "partial_red_oom": round(pt_red, 1),
+            "total_red_oom": round(df_red + ts_red + pt_red, 1),
+        })
+        print(csv_line(
+            f"fig6/{name}", dt * 1e6,
+            f"df={rows[-1]['dataflow_red_oom']};"
+            f"ts={rows[-1]['tileshape_red_oom']};"
+            f"partial={rows[-1]['partial_red_oom']}"), flush=True)
+    return rows

@@ -1,0 +1,62 @@
+"""Paper Fig. 7: mapspace-size scaling with and without pruning.
+
+Left: square matmuls of growing size on the TPU-v4i-like accelerator.
+Right: growing number of extra size-1 ranks on the weight tensor.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.einsum import Einsum, TensorSpec, matmul
+from repro.core.mapper import tcm_map
+from repro.core.presets import tpu_v4i_like
+
+from .common import csv_line
+
+
+def _matmul_extra_ranks(M: int, K: int, N: int, extra: int) -> Einsum:
+    """Z[m,n] = A[m,k] B[k,n,r1..re] with size-1 extra ranks on B."""
+    extra_vars = tuple(f"r{i}" for i in range(extra))
+    shapes = {"m": M, "k": K, "n": N}
+    shapes.update({v: 1 for v in extra_vars})
+    return Einsum(
+        name=f"mm+{extra}",
+        tensors=(
+            TensorSpec("A", ("m", "k")),
+            TensorSpec("B", ("k", "n") + extra_vars),
+            TensorSpec("Z", ("m", "n"), is_output=True),
+        ),
+        rank_shapes=shapes,
+    )
+
+
+def run(scale: str = "small") -> list:
+    rows = []
+    sizes = [2 ** p for p in ((8, 9, 10, 11, 12) if scale == "paper"
+                              else (6, 8, 10))]
+    for size in sizes:
+        ein = matmul(f"mm{size}", size, size, size)
+        arch = tpu_v4i_like()
+        t0 = time.perf_counter()
+        _, s = tcm_map(ein, arch)
+        dt = time.perf_counter() - t0
+        rows.append({"sweep": "size", "x": size,
+                     "log10_total": round(s.log10_total, 1),
+                     "log10_pruned": round(s.log10_evaluated, 1)})
+        print(csv_line(f"fig7/size{size}", dt * 1e6,
+                       f"total={rows[-1]['log10_total']};"
+                       f"pruned={rows[-1]['log10_pruned']}"), flush=True)
+    base = 2 ** 12 if scale == "paper" else 2 ** 8
+    for extra in (0, 1, 2) if scale != "paper" else (0, 1, 2, 3, 4):
+        ein = _matmul_extra_ranks(base, base, base, extra)
+        arch = tpu_v4i_like()
+        t0 = time.perf_counter()
+        _, s = tcm_map(ein, arch)
+        dt = time.perf_counter() - t0
+        rows.append({"sweep": "ranks", "x": extra,
+                     "log10_total": round(s.log10_total, 1),
+                     "log10_pruned": round(s.log10_evaluated, 1)})
+        print(csv_line(f"fig7/ranks{extra}", dt * 1e6,
+                       f"total={rows[-1]['log10_total']};"
+                       f"pruned={rows[-1]['log10_pruned']}"), flush=True)
+    return rows

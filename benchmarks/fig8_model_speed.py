@@ -1,0 +1,149 @@
+"""Paper Fig. 8: curried model vs full model speed, and runtime breakdown.
+
+Three model variants evaluated on the same (dataplacement, dataflow) and a
+batch of tile shapes:
+  * full   — the non-curried reference model (``refmodel.evaluate``): full
+    structural analysis per mapping (the paper's "Full (Python)").
+  * curried — the tile-shape-only model (symbolic analysis done once,
+    vectorized numpy numeric evaluation).
+  * curried-jax — the same expressions jit-compiled with JAX (our TPU-native
+    expression of the paper's currying; included in the speedup table).
+Plus the tcm_map phase breakdown (the paper's right-hand pie).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dataflow import enumerate_skeletons
+from repro.core.dataplacement import enumerate_dataplacements
+from repro.core.mapper import tcm_map
+from repro.core.model import CurriedModel
+from repro.core.refmodel import evaluate
+from repro.core.tileshape import _Stepper, explore
+
+from .common import csv_line, workloads
+
+
+def _sample_full_bounds(cm, rng, n):
+    """n random complete factorizations for the curried model's sites."""
+    shapes = dict(cm.einsum.rank_shapes)
+    by_var = {}
+    for i, s in enumerate(cm.sites):
+        by_var.setdefault(s.var, []).append(i)
+    out = []
+    for _ in range(n):
+        bounds = np.ones(len(cm.sites), dtype=np.int64)
+        ok = True
+        caps = {}
+        for v, sites_i in by_var.items():
+            q = shapes[v]
+            for i in sites_i[:-1]:
+                divs = [d for d in range(1, q + 1) if q % d == 0]
+                s = cm.sites[i]
+                if s.spatial:
+                    cap = caps.get((s.fanout, s.dim),
+                                   cm.arch.fanouts[s.fanout].dims[s.dim])
+                    divs = [d for d in divs if d <= cap]
+                d = int(rng.choice(divs))
+                bounds[i] = d
+                q //= d
+                if s.spatial:
+                    caps[(s.fanout, s.dim)] = cap // d
+            i = sites_i[-1]
+            s = cm.sites[i]
+            if s.spatial:
+                cap = caps.get((s.fanout, s.dim),
+                               cm.arch.fanouts[s.fanout].dims[s.dim])
+                if q > cap:
+                    ok = False
+                    break
+            bounds[i] = q
+        if ok:
+            out.append(bounds)
+    return np.array(out) if out else None
+
+
+def run(scale: str = "small") -> list:
+    name = "QK"
+    ein, arch = workloads(scale)[name]
+    dp = max(enumerate_dataplacements(ein, arch), key=len)
+    sk = list(enumerate_skeletons(ein, arch, dp))[0]
+
+    t0 = time.perf_counter()
+    cm = CurriedModel(ein, arch, sk)
+    tsm = cm.tile_shape_model
+    t_curry = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    n = 2000 if scale == "small" else 20000
+    bounds = _sample_full_bounds(cm, rng, n)
+    assert bounds is not None and len(bounds) > 100
+
+    # full (non-curried) python model: re-analyzes the mapping each call
+    n_full = min(200, len(bounds))
+    t0 = time.perf_counter()
+    for b in bounds[:n_full]:
+        evaluate(ein, arch, cm.concretize(b))
+    full_us = (time.perf_counter() - t0) / n_full * 1e6
+
+    # curried vectorized numpy
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        tsm(bounds)
+    curried_us = (time.perf_counter() - t0) / (reps * len(bounds)) * 1e6
+
+    # curried + jax.jit
+    import jax
+    import jax.numpy as jnp
+
+    def jax_eval(cols):
+        def poly(terms, cols):
+            acc = jnp.zeros(cols.shape[0])
+            for coeff, idx, exps in terms:
+                t = jnp.full(cols.shape[0], coeff)
+                for i, e in zip(idx, exps):
+                    t = t * cols[:, i] ** e
+                acc = acc + t
+            return acc
+        e = poly(tsm._energy._arms[0], cols)
+        l = jnp.stack([poly(a, cols) for a in tsm._latency._arms]).max(0)
+        return e, l
+
+    jf = jax.jit(jax_eval)
+    cols = jnp.asarray(bounds, dtype=jnp.float32)
+    jf(cols)[0].block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jf(cols)[0].block_until_ready()
+    jax_us = (time.perf_counter() - t0) / (reps * len(bounds)) * 1e6
+
+    rows = [{
+        "curry_once_s": round(t_curry, 4),
+        "full_python_us": round(full_us, 2),
+        "curried_us": round(curried_us, 4),
+        "curried_jax_us": round(jax_us, 4),
+        "speedup_numpy": round(full_us / curried_us, 1),
+        "speedup_jax": round(full_us / jax_us, 1),
+    }]
+    print(csv_line("fig8/full_python", full_us, "per-eval"), flush=True)
+    print(csv_line("fig8/curried_numpy", curried_us,
+                   f"speedup={rows[0]['speedup_numpy']}x"), flush=True)
+    print(csv_line("fig8/curried_jax", jax_us,
+                   f"speedup={rows[0]['speedup_jax']}x"), flush=True)
+
+    # phase breakdown of the full mapper (paper Fig 8 right)
+    _, s = tcm_map(ein, arch)
+    total = max(s.t_total, 1e-9)
+    rows.append({
+        "phase_dataplacement_pct": round(100 * s.t_dataplacement / total, 2),
+        "phase_dataflow_pct": round(100 * s.t_dataflow / total, 2),
+        "phase_curry_pct": round(100 * s.t_curry / total, 2),
+        "phase_tileshape_pct": round(100 * s.t_tileshape / total, 2),
+    })
+    print(csv_line("fig8/breakdown", total * 1e6,
+                   f"curry%={rows[1]['phase_curry_pct']};"
+                   f"ts%={rows[1]['phase_tileshape_pct']}"), flush=True)
+    return rows

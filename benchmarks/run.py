@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--scale small|paper] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines and writes a JSON dump to
+``bench_results.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("small", "paper"), default="small")
+    ap.add_argument("--only", default=None,
+                    help="table2|fig6|fig7|fig8|table3")
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args()
+
+    from . import fig6_breakdown, fig7_scaling, fig8_model_speed
+    from . import table2_pruning, table3_edp
+
+    benches = {
+        "table2": table2_pruning.run,
+        "fig6": fig6_breakdown.run,
+        "fig7": fig7_scaling.run,
+        "fig8": fig8_model_speed.run,
+        "table3": table3_edp.run,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        results[name] = fn(scale=args.scale)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    with open(args.out, "w") as f:
+        json.dump({"scale": args.scale, "results": results}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

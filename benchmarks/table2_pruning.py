@@ -1,0 +1,32 @@
+"""Paper Table II: total vs non-pruned mappings per Einsum (orders of magnitude).
+
+Runs the full TCM search per workload and reports log10 mapspace sizes:
+  total     = |DP| x |DF_unpruned| x |TS_unpruned|
+  nonpruned = mappings actually evaluated by TCM
+  reduction = total - nonpruned  (orders of magnitude pruned)
+"""
+from __future__ import annotations
+
+import time
+
+from .common import cached_tcm, csv_line, workloads
+
+
+def run(scale: str = "small") -> list:
+    rows = []
+    for name, (ein, arch) in workloads(scale).items():
+        best, stats, dt = cached_tcm(name, scale, ein, arch)
+        rows.append({
+            "einsum": name,
+            "log10_total": round(stats.log10_total, 1),
+            "log10_nonpruned": round(stats.log10_evaluated, 1),
+            "reduction_oom": round(stats.log10_total - stats.log10_evaluated, 1),
+            "edp": best.edp if best else None,
+            "wall_s": round(dt, 2),
+        })
+        print(csv_line(
+            f"table2/{name}", dt * 1e6,
+            f"total_oom={rows[-1]['log10_total']};"
+            f"nonpruned_oom={rows[-1]['log10_nonpruned']};"
+            f"reduction={rows[-1]['reduction_oom']}"), flush=True)
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Table III: best EDP found by each mapper at growing search budgets.
+
+TCM runs to completion (optimal).  Baselines get budgets of 1x, 10x, 100x
+(and 1000x at small scale) TCM's own evaluation count; EDP is normalized to
+TCM's optimum (lower is better; 1.0 = optimal).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.baselines import loma_like, timeloop_like
+from repro.core.mapper import tcm_map
+
+from .common import csv_line, workloads
+
+
+def run(scale: str = "small") -> list:
+    from .common import cached_tcm
+
+    name = "QK"
+    ein, arch = workloads(scale)[name]
+    best, stats, t_tcm = cached_tcm(name, scale, ein, arch)
+    assert best is not None
+    # Budgets are reference-model evaluations; the baseline's full model is
+    # ~1000x slower per eval than TCM's curried model (Fig 8), so equal-eval
+    # budgets are *generous* to the baselines.  Wall-clock capped for the
+    # single-core container (noted in EXPERIMENTS.md).
+    muls = (1, 10, 100) if scale == "small" else (1, 10)
+    base_budget = 1000
+
+    rows = [{"mapper": "TCM", "budget": stats.n_final_evals,
+             "edp_norm": 1.0, "wall_s": round(t_tcm, 1)}]
+    print(csv_line("table3/TCM", t_tcm * 1e6, "edp_norm=1.0"), flush=True)
+    for mul in muls:
+        budget = base_budget * mul
+        for mapper, kwargs, label in (
+                (timeloop_like, {}, "timeloop"),
+                (timeloop_like, {"full_spatial_hint": True}, "timeloop+hint"),
+                (loma_like, {"lpf_limit": 3}, "loma")):
+            r = mapper(ein, arch, budget, seed=42, **kwargs)
+            norm = r.objective("edp") / best.edp
+            rows.append({"mapper": label, "budget": budget,
+                         "edp_norm": round(norm, 3),
+                         "wall_s": round(r.wall_s, 1)})
+            print(csv_line(f"table3/{label}@{mul}x", r.wall_s * 1e6,
+                           f"edp_norm={round(norm, 3)}"), flush=True)
+    return rows

@@ -1,0 +1,42 @@
+"""Quickstart: find the optimal mapping of a GPT-3-style einsum with TCM.
+
+  PYTHONPATH=src python examples/quickstart.py            # ~1 minute
+  PYTHONPATH=src python examples/quickstart.py --paper    # full GPT-3 6.7B QK
+"""
+import argparse
+import time
+
+from repro.core import render, tcm_map
+from repro.core.baselines import loma_like, timeloop_like
+from repro.core.presets import gpt3_einsums, small_matmul_suite, tpu_v4i_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full GPT-3 6.7B shapes (minutes)")
+    args = ap.parse_args()
+    # the attention-score einsum of one GPT-3 decoder layer
+    einsum = (gpt3_einsums() if args.paper else small_matmul_suite())["QK"]
+    arch = tpu_v4i_like()
+
+    t0 = time.time()
+    best, stats = tcm_map(einsum, arch, objective="edp")
+    dt = time.time() - t0
+
+    print(f"searched {stats.log10_total:.0f} orders of magnitude of mappings"
+          f" -> evaluated 10^{stats.log10_evaluated:.1f} in {dt:.1f}s")
+    print(f"optimal EDP = {best.edp:.4g} (energy {best.energy:.4g} pJ, "
+          f"latency {best.latency:.4g} s)\n")
+    print("Optimal LoopTree:")
+    print(render(best.mapping))
+
+    # compare against a random-sampling baseline with the same eval budget
+    rnd = timeloop_like(einsum, arch, budget_evals=2000, seed=0)
+    loma = loma_like(einsum, arch, budget_evals=2000, seed=0)
+    print(f"\nrandom-sampling baseline: {rnd.objective('edp') / best.edp:.2f}x"
+          f" optimal;  LOMA-like: {loma.objective('edp') / best.edp:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro.core — the Turbo-Charged Mapper (TCM).
+
+Public API:
+  * Workload IR: ``Einsum``, ``TensorSpec``, helpers ``matmul`` etc.
+  * Hardware IR: ``Arch``, ``MemLevel``, ``SpatialFanout``.
+  * Mapping IR: ``Storage``, ``Loop``, ``render``.
+  * The mapper: ``tcm_map`` (optimal search), ``evaluate`` (reference model),
+    ``brute_force_optimum`` (validation oracle), baselines in ``baselines``.
+"""
+from .arch import Arch, MemLevel, SpatialFanout
+from .einsum import Einsum, TensorSpec, batched_matmul, conv1d, depthwise_conv1d, matmul
+from .looptree import Loop, Storage, render, validate_structure
+from .mapper import MapperStats, MappingResult, tcm_map, unpruned_mapspace_log10
+from .model import CurriedModel
+from .refmodel import EvalResult, evaluate
+
+__all__ = [
+    "Arch", "MemLevel", "SpatialFanout",
+    "Einsum", "TensorSpec", "matmul", "batched_matmul", "conv1d",
+    "depthwise_conv1d",
+    "Loop", "Storage", "render", "validate_structure",
+    "tcm_map", "MapperStats", "MappingResult", "unpruned_mapspace_log10",
+    "CurriedModel", "EvalResult", "evaluate",
+]

@@ -1,0 +1,101 @@
+"""Accelerator architecture model.
+
+An architecture is an ordered list of memory levels (outermost backing store
+first), optional spatial fanouts *below* a level (e.g. a PE array between the
+global buffer and per-PE buffers), and compute parameters.
+
+Units: capacities in words (elements), energies in pJ per word access (or per
+MAC), bandwidths in words/s, frequency in Hz.  Latency comes out in seconds,
+energy in pJ; EDP in pJ*s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MemLevel:
+    name: str
+    capacity: float  # words; inf for DRAM
+    read_energy: float  # pJ / word
+    write_energy: float  # pJ / word
+    bandwidth: float  # words / s (combined rd+wr unless split)
+    read_bandwidth: Optional[float] = None
+    write_bandwidth: Optional[float] = None
+    # Restrict which tensors may have a storage node here (None = all).
+    # Entries are tensor names; hardware like a weight-register file uses this.
+    allowed_tensors: Optional[Tuple[str, ...]] = None
+    # If True, every tensor in allowed set MUST have a node here (backing
+    # stores + mandatory register files).
+    mandatory: bool = False
+    # If True (with mandatory), only the canonical storage-node order is
+    # generated for this level — a user dataplacement constraint (paper §V-A)
+    # used to pin hardware-dedicated buffers.
+    fixed_order: bool = False
+
+
+@dataclass(frozen=True)
+class SpatialFanout:
+    """A spatial array boundary below memory level ``above_level``.
+
+    Each dim has a size, and an optional constraint on what may be mapped:
+      * ``multicast_tensor``: instances along this dim receive the same data
+        of this tensor (loops over vars *irrelevant* to it go here); parent
+        reads of that tensor are not multiplied by this dim.
+      * ``reduce_tensor``: partial outputs along this dim are reduced
+        in-network (contraction vars go here); parent writes of the output
+        are not multiplied by this dim.
+    If both are None the dim is unconstrained (any var; no discounts).
+    """
+
+    above_level: int  # index into Arch.levels; fanout sits below this level
+    dims: Tuple[int, ...]
+    multicast_tensor: Tuple[Optional[str], ...] = ()
+    reduce_tensor: Tuple[Optional[str], ...] = ()
+
+    def __post_init__(self):
+        n = len(self.dims)
+        if not self.multicast_tensor:
+            object.__setattr__(self, "multicast_tensor", (None,) * n)
+        if not self.reduce_tensor:
+            object.__setattr__(self, "reduce_tensor", (None,) * n)
+
+    @property
+    def total(self) -> int:
+        out = 1
+        for d in self.dims:
+            out *= d
+        return out
+
+
+@dataclass(frozen=True)
+class Arch:
+    name: str
+    levels: Tuple[MemLevel, ...]  # [0] = outermost backing store (DRAM)
+    fanouts: Tuple[SpatialFanout, ...] = ()
+    mac_energy: float = 1.0  # pJ / MAC
+    frequency: float = 1e9  # Hz; compute latency = macs/units/frequency
+
+    def __post_init__(self):
+        assert self.levels, "need at least one memory level"
+        assert self.levels[0].capacity == float("inf") or self.levels[0].capacity > 0
+
+    @property
+    def total_compute_units(self) -> int:
+        out = 1
+        for f in self.fanouts:
+            out *= f.total
+        return out
+
+    def fanout_below(self, level_idx: int) -> Optional[SpatialFanout]:
+        for f in self.fanouts:
+            if f.above_level == level_idx:
+                return f
+        return None
+
+    def level_index(self, name: str) -> int:
+        for i, l in enumerate(self.levels):
+            if l.name == name:
+                return i
+        raise KeyError(name)

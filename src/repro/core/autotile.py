@@ -1,0 +1,77 @@
+"""TCM as a compile-time Pallas BlockSpec autotuner.
+
+The HBM->VMEM->MXU hierarchy of one TPU core is a two-level Arch for the
+mapper.  MXU alignment (tiles in multiples of 128) is imposed as a mapspace
+constraint by searching in units of 128x128 blocks — i.e. the rank shapes
+are divided by 128 before the search and the chosen bounds are scaled back.
+The optimal mapping's VMEM tile shapes become the kernel's BlockSpec blocks.
+
+This is the paper's technique applied where a TPU programmer actually makes
+tiling choices — the hardware-adaptation path described in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, Tuple
+
+from .arch import Arch, MemLevel, SpatialFanout
+from .einsum import matmul
+from .looptree import Loop, Storage
+from .mapper import tcm_map
+
+MXU = 128
+
+
+def _v5e_core(vmem_blocks: int) -> Arch:
+    """Block-unit model of one v5e core: the 'word' is a 128x128 tile and a
+    'MAC' is one 128x128x128 MXU block-matmul.
+
+    HBM bw: 819 GB/s / (2B * 128^2)  = 2.5e7 blocks/s
+    MXU:    197 TFLOP/s / (2*128^3)  = 4.7e7 block-matmuls/s
+    VMEM bw ~ 10x HBM.
+    """
+    return Arch(
+        name="v5e-core-blocks",
+        levels=(
+            MemLevel("HBM", float("inf"), 40.0, 40.0, 2.5e7),
+            MemLevel("VMEM", vmem_blocks, 1.0, 1.0, 2.5e8),
+        ),
+        mac_energy=0.2,
+        frequency=4.7e7,
+    )
+
+
+def _tile_products(best, einsum, level: int = 1) -> Dict[str, int]:
+    """Per-rank-var product of loop bounds below the first `level` storage
+    node — the tile each VMEM block covers."""
+    nodes = list(best.mapping)
+    first = next(i for i, n in enumerate(nodes)
+                 if isinstance(n, Storage) and n.level == level)
+    out: Dict[str, int] = {v: 1 for v in einsum.rank_shapes}
+    for n in nodes[first + 1:]:
+        if isinstance(n, Loop):
+            out[n.var] *= n.bound
+    return out
+
+
+@lru_cache(maxsize=None)
+def tcm_matmul_tiles(M: int, K: int, N: int,
+                     vmem_bytes: int = 16 * 2 ** 20,
+                     word_bytes: int = 2) -> Tuple[int, int, int]:
+    """Optimal (bm, bk, bn) VMEM tile for Z[M,N] = A[M,K] @ B[K,N].
+
+    Falls back to 128-aligned minima when a dim is smaller than the MXU.
+    """
+    mb = max(M // MXU, 1)
+    kb = max(K // MXU, 1)
+    nb = max(N // MXU, 1)
+    # capacity in 128x128-block units
+    vmem_blocks = vmem_bytes // word_bytes // (MXU * MXU)
+    ein = matmul("mm", mb, kb, nb)
+    arch = _v5e_core(vmem_blocks)
+    best, _ = tcm_map(ein, arch, objective="latency")
+    if best is None:
+        return (min(M, MXU), min(K, MXU), min(N, MXU))
+    t = _tile_products(best, ein)
+    return (min(M, t["m"] * MXU), min(K, t["k"] * MXU),
+            min(N, t["n"] * MXU))

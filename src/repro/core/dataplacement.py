@@ -1,0 +1,62 @@
+"""Dataplacement enumeration (paper §V-A).
+
+A dataplacement is the set of storage nodes plus their order.  Level-0 (the
+outermost backing store) always holds every tensor, in canonical order, with
+no loops between its nodes.  For each deeper level we choose which tensors to
+keep (subject to ``MemLevel.allowed_tensors`` / ``mandatory``) and the order
+of the chosen storage nodes within the level.  Levels appear in hierarchy
+order (the paper's default; footnote 4's per-tensor relaxation is future
+work and would only enlarge |DP|, which stays small either way).
+"""
+from __future__ import annotations
+
+from itertools import permutations
+from typing import Iterator, List, Sequence, Tuple
+
+from .arch import Arch
+from .einsum import Einsum
+from .looptree import Storage
+
+Dataplacement = Tuple[Storage, ...]
+
+
+def _level_choices(arch: Arch, level: int, tensors: Sequence[str]) -> List[Tuple[str, ...]]:
+    lvl = arch.levels[level]
+    allowed = [t for t in tensors
+               if lvl.allowed_tensors is None or t in lvl.allowed_tensors]
+    out: List[Tuple[str, ...]] = []
+    if lvl.mandatory:
+        if lvl.fixed_order:
+            return [tuple(allowed)]
+        # every allowed tensor must be present; orders still vary
+        out.extend(permutations(allowed))
+        return out
+    # all subsets x orderings
+    n = len(allowed)
+    for mask in range(1 << n):
+        subset = [allowed[i] for i in range(n) if mask >> i & 1]
+        out.extend(permutations(subset))
+    return out
+
+
+def enumerate_dataplacements(einsum: Einsum, arch: Arch) -> Iterator[Dataplacement]:
+    tensors = [t.name for t in einsum.tensors]
+    backing = tuple(Storage(0, t) for t in tensors)
+
+    def rec(level: int, acc: Tuple[Storage, ...]) -> Iterator[Dataplacement]:
+        if level == len(arch.levels):
+            yield acc
+            return
+        for choice in _level_choices(arch, level, tensors):
+            yield from rec(level + 1,
+                           acc + tuple(Storage(level, t) for t in choice))
+
+    yield from rec(1, backing)
+
+
+def count_dataplacements(einsum: Einsum, arch: Arch) -> int:
+    tensors = [t.name for t in einsum.tensors]
+    total = 1
+    for level in range(1, len(arch.levels)):
+        total *= len(_level_choices(arch, level, tensors))
+    return total

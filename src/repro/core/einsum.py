@@ -1,0 +1,141 @@
+"""Einsum workload IR.
+
+An Einsum names a set of *rank variables* with integer shapes, and a set of
+tensors.  Each tensor dim is either a single rank var (fully relevant) or an
+affine pair ``(p, r)`` meaning index ``p + r`` (both vars *partially
+relevant*, e.g. convolution sliding windows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import reduce
+from typing import Mapping, Sequence, Tuple, Union
+
+Dim = Union[str, Tuple[str, str]]
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    dims: Tuple[Dim, ...]
+    is_output: bool = False
+    word_bits: int = 16  # element width; energies/capacities scale by words
+
+    def rank_vars(self) -> frozenset:
+        out = set()
+        for d in self.dims:
+            if isinstance(d, tuple):
+                out.update(d)
+            else:
+                out.add(d)
+        return frozenset(out)
+
+    def relevant(self, var: str) -> bool:
+        """Does ``var`` index into this tensor (fully or partially)?"""
+        return var in self.rank_vars()
+
+    def partially_relevant(self, var: str) -> bool:
+        return any(isinstance(d, tuple) and var in d for d in self.dims)
+
+
+@dataclass(frozen=True)
+class Einsum:
+    name: str
+    tensors: Tuple[TensorSpec, ...]
+    rank_shapes: Mapping[str, int]  # rank var -> exclusive upper bound
+
+    def __post_init__(self):
+        outs = [t for t in self.tensors if t.is_output]
+        assert len(outs) == 1, "exactly one output tensor"
+        for t in self.tensors:
+            for v in t.rank_vars():
+                assert v in self.rank_shapes, f"unknown rank var {v}"
+
+    @property
+    def output(self) -> TensorSpec:
+        return next(t for t in self.tensors if t.is_output)
+
+    @property
+    def inputs(self) -> Tuple[TensorSpec, ...]:
+        return tuple(t for t in self.tensors if not t.is_output)
+
+    def tensor(self, name: str) -> TensorSpec:
+        return next(t for t in self.tensors if t.name == name)
+
+    @property
+    def rank_vars(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.rank_shapes))
+
+    @property
+    def contraction_vars(self) -> frozenset:
+        """Rank vars not indexing the output (summed over)."""
+        return frozenset(self.rank_shapes) - self.output.rank_vars()
+
+    @property
+    def total_computes(self) -> int:
+        # One MAC per point in the full iteration space.
+        return reduce(lambda a, b: a * b, self.rank_shapes.values(), 1)
+
+    def tensor_size(self, t: TensorSpec) -> int:
+        size = 1
+        for d in t.dims:
+            if isinstance(d, tuple):
+                p, r = d
+                size *= self.rank_shapes[p] + self.rank_shapes[r] - 1
+            else:
+                size *= self.rank_shapes[d]
+        return size
+
+
+# -- convenience constructors ------------------------------------------------
+
+def matmul(name: str, M: int, K: int, N: int) -> Einsum:
+    """Z[m,n] = A[m,k] * B[k,n]."""
+    return Einsum(
+        name=name,
+        tensors=(
+            TensorSpec("A", ("m", "k")),
+            TensorSpec("B", ("k", "n")),
+            TensorSpec("Z", ("m", "n"), is_output=True),
+        ),
+        rank_shapes={"m": M, "k": K, "n": N},
+    )
+
+
+def batched_matmul(name: str, H: int, M: int, K: int, N: int) -> Einsum:
+    """Z[h,m,n] = A[h,m,k] * B[h,k,n] (multi-head attention style)."""
+    return Einsum(
+        name=name,
+        tensors=(
+            TensorSpec("A", ("h", "m", "k")),
+            TensorSpec("B", ("h", "k", "n")),
+            TensorSpec("Z", ("h", "m", "n"), is_output=True),
+        ),
+        rank_shapes={"h": H, "m": M, "k": K, "n": N},
+    )
+
+
+def conv1d(name: str, P: int, R: int, C: int, Kc: int, Nb: int = 1) -> Einsum:
+    """Z[n,kc,p] = A[n,c,p+r] * W[kc,c,r]  (pointwise if R == 1)."""
+    return Einsum(
+        name=name,
+        tensors=(
+            TensorSpec("A", ("n", "c", ("p", "r"))),
+            TensorSpec("W", ("kc", "c", "r")),
+            TensorSpec("Z", ("n", "kc", "p"), is_output=True),
+        ),
+        rank_shapes={"n": Nb, "c": C, "kc": Kc, "p": P, "r": R},
+    )
+
+
+def depthwise_conv1d(name: str, P: int, R: int, C: int, Nb: int = 1) -> Einsum:
+    """Z[n,c,p] = A[n,c,p+r] * W[c,r]  (depthwise: channel shared)."""
+    return Einsum(
+        name=name,
+        tensors=(
+            TensorSpec("A", ("n", "c", ("p", "r"))),
+            TensorSpec("W", ("c", "r")),
+            TensorSpec("Z", ("n", "c", "p"), is_output=True),
+        ),
+        rank_shapes={"n": Nb, "c": C, "p": P, "r": R},
+    )

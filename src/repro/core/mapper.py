@@ -1,0 +1,199 @@
+"""The Turbo-Charged Mapper driver (paper §V, Fig. 5).
+
+Pipeline: enumerate dataplacements -> per dataplacement, enumerate
+Pareto-relevant dataflow skeletons -> curry the model once per skeleton ->
+explore tile shapes with partial-tile-shape pruning -> track the global
+optimum.  Also accounts mapspace sizes (total vs non-pruned; Table II /
+Figs. 6-7) and phase runtimes (Fig. 8).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .arch import Arch
+from .dataflow import count_unpruned_dataflows, enumerate_skeletons, make_slots
+from .dataplacement import count_dataplacements, enumerate_dataplacements
+from .einsum import Einsum
+from .looptree import Loop, Mapping, validate_structure
+from .model import CurriedModel
+from .refmodel import EvalResult, evaluate
+from .tileshape import ExploreStats, explore
+
+
+@lru_cache(maxsize=None)
+def _prime_factorization(n: int) -> Tuple[Tuple[int, int], ...]:
+    out = []
+    d = 2
+    while d * d <= n:
+        e = 0
+        while n % d == 0:
+            n //= d
+            e += 1
+        if e:
+            out.append((d, e))
+        d += 1
+    if n > 1:
+        out.append((n, 1))
+    return tuple(out)
+
+
+def count_ordered_factorizations(n: int, slots: int) -> float:
+    """Number of ways to write n as an ordered product of `slots` factors."""
+    if slots <= 0:
+        return 1.0 if n == 1 else 0.0
+    total = 1.0
+    for _, e in _prime_factorization(n):
+        total *= math.comb(e + slots - 1, slots - 1)
+    return total
+
+
+@dataclass
+class MapperStats:
+    # log10 mapspace sizes (Table II / Fig 6)
+    log10_total: float = 0.0
+    log10_after_df_pruning: float = 0.0  # dataflow pruning only
+    log10_after_loop_pruning: float = 0.0  # + tile-shape (loop) pruning
+    log10_evaluated: float = 0.0  # + partial tile-shape pruning
+    n_dataplacements: int = 0
+    n_skeletons: int = 0  # pruned |DF| summed over dataplacements
+    n_final_evals: int = 0
+    n_expanded: int = 0
+    n_pruned_dominated: int = 0
+    n_pruned_invalid: int = 0
+    n_pruned_bound: int = 0
+    # phase runtimes (Fig 8 breakdown)
+    t_dataplacement: float = 0.0
+    t_dataflow: float = 0.0
+    t_curry: float = 0.0
+    t_tileshape: float = 0.0
+    t_total: float = 0.0
+
+
+@dataclass
+class MappingResult:
+    mapping: Mapping
+    energy: float
+    latency: float
+    edp: float
+
+    def objective(self, kind: str) -> float:
+        return {"edp": self.edp, "energy": self.energy,
+                "latency": self.latency}[kind]
+
+
+def _log10_tileshapes(einsum: Einsum, positions_per_var: Dict[str, int]) -> float:
+    out = 0.0
+    for v, shape in einsum.rank_shapes.items():
+        c = count_ordered_factorizations(shape, positions_per_var.get(v, 1))
+        out += math.log10(max(c, 1.0))
+    return out
+
+
+def unpruned_mapspace_log10(einsum: Einsum, arch: Arch) -> float:
+    """log10 |Mapspace| = |DP| * |DF| * |TS| without any pruning."""
+    total = 0.0
+    n_dp = 0
+    for dp in enumerate_dataplacements(einsum, arch):
+        n_dp += 1
+        slots = make_slots(einsum, arch, dp)
+        n_slots = len(slots)
+        n_spatial = sum(len(f.dims) for f in arch.fanouts)
+        df = count_unpruned_dataflows(einsum, arch, dp)
+        ts = _log10_tileshapes(
+            einsum, {v: n_slots + n_spatial for v in einsum.rank_shapes})
+        total += 10 ** min(math.log10(max(df, 1.0)) + ts, 300)
+    return math.log10(max(total, 1.0))
+
+
+def tcm_map(
+    einsum: Einsum,
+    arch: Arch,
+    objective: str = "edp",
+    prune_partial: bool = True,
+    collect_sizes: bool = True,
+    verbose: bool = False,
+) -> Tuple[Optional[MappingResult], MapperStats]:
+    stats = MapperStats()
+    t0 = time.perf_counter()
+    best: Optional[MappingResult] = None
+
+    t = time.perf_counter()
+    dps = list(enumerate_dataplacements(einsum, arch))
+    stats.n_dataplacements = len(dps)
+    stats.t_dataplacement = time.perf_counter() - t
+
+    log_total = 0.0  # accumulated linearly in units of 10**300-capped logs
+    sum_total = 0.0
+    sum_df_pruned = 0.0
+    sum_loop_pruned = 0.0
+
+    for dp in dps:
+        t = time.perf_counter()
+        skeletons = list(enumerate_skeletons(einsum, arch, dp))
+        stats.t_dataflow += time.perf_counter() - t
+        stats.n_skeletons += len(skeletons)
+
+        if collect_sizes:
+            slots = make_slots(einsum, arch, dp)
+            n_slots = len(slots)
+            n_spatial = sum(len(f.dims) for f in arch.fanouts)
+            df_unpruned = count_unpruned_dataflows(einsum, arch, dp)
+            ts_unpruned = _log10_tileshapes(
+                einsum, {v: n_slots + n_spatial for v in einsum.rank_shapes})
+            sum_total += 10 ** min(
+                math.log10(max(df_unpruned, 1.0)) + ts_unpruned - 300, 0)
+            # dataflow pruning only: pruned DF count, unpruned tile shapes
+            sum_df_pruned += len(skeletons) * 10 ** min(ts_unpruned - 300, 0)
+
+        for sk in skeletons:
+            if collect_sizes:
+                ppv: Dict[str, int] = {}
+                for n in sk:
+                    if isinstance(n, Loop):
+                        ppv[n.var] = ppv.get(n.var, 0) + 1
+                sum_loop_pruned += 10 ** min(
+                    _log10_tileshapes(einsum, ppv) - 300, 0)
+
+            t = time.perf_counter()
+            cm = CurriedModel(einsum, arch, sk)
+            stats.t_curry += time.perf_counter() - t
+
+            t = time.perf_counter()
+            res = explore(cm, objective=objective, prune_partial=prune_partial)
+            stats.t_tileshape += time.perf_counter() - t
+            if res is None:
+                continue
+            stats.n_final_evals += res.stats.n_final
+            stats.n_expanded += res.stats.n_expanded
+            stats.n_pruned_dominated += res.stats.n_pruned_dominated
+            stats.n_pruned_invalid += res.stats.n_pruned_invalid
+            stats.n_pruned_bound += res.stats.n_pruned_bound
+            if best is None or _better(res, best, objective):
+                mapping = cm.concretize(res.bounds)
+                validate_structure(einsum, arch, mapping)
+                best = MappingResult(mapping, res.energy, res.latency, res.edp)
+        if verbose:
+            print(f"dp done: skeletons={len(skeletons)} "
+                  f"best={best.edp if best else None}")
+
+    stats.log10_total = math.log10(max(sum_total, 1e-300)) + 300
+    stats.log10_after_df_pruning = math.log10(max(sum_df_pruned, 1e-300)) + 300
+    stats.log10_after_loop_pruning = (
+        math.log10(max(sum_loop_pruned, 1e-300)) + 300)
+    # "evaluated" = every point where the (curried) model is applied to a
+    # candidate: partial criteria/bound evaluations + final full evaluations
+    # (the paper counts tile-shape-only model invocations the same way).
+    stats.log10_evaluated = math.log10(max(stats.n_expanded, 1))
+    stats.t_total = time.perf_counter() - t0
+    return best, stats
+
+
+def _better(res, best: MappingResult, objective: str) -> bool:
+    val = {"edp": res.edp, "energy": res.energy, "latency": res.latency}
+    return val[objective] < best.objective(objective)

@@ -1,0 +1,142 @@
+"""The curried model (paper §IV-D, §V-C).
+
+``CurriedModel(einsum, arch, skeleton)`` runs the expensive structural/symbolic
+analysis ONCE for a given (dataplacement, dataflow) skeleton, producing
+polynomial expressions for energy, latency and per-level usage over one symbol
+per loop bound.  ``TileShapeOnlyModel`` then evaluates those expressions for
+millions of candidate tile shapes as vectorized numpy arithmetic — the paper's
+"tile-shape-only model is run 2M times but consumes <0.1% of runtime".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .arch import Arch
+from .einsum import Einsum
+from .looptree import Loop, Mapping, Storage
+from .refmodel import analyze
+from .symbolic import CompiledExpr, MaxExpr, Mono, Poly
+
+
+@dataclass(frozen=True)
+class LoopSite:
+    """One loop in the skeleton whose bound is a free symbol."""
+
+    index: int  # position in the skeleton mapping
+    sym: str
+    var: str
+    spatial: bool
+    fanout: int
+    dim: int
+
+
+class CurriedModel:
+    """FullModel(dataplacement, dataflow) -> TileShapeOnlyModel."""
+
+    def __init__(self, einsum: Einsum, arch: Arch, skeleton: Mapping):
+        self.einsum = einsum
+        self.arch = arch
+        self.skeleton = skeleton
+
+        self.sites: List[LoopSite] = []
+        sym_by_id: Dict[int, str] = {}
+        for i, n in enumerate(skeleton):
+            if isinstance(n, Loop):
+                sym = f"b{i}"
+                sym_by_id[id(n)] = sym
+                self.sites.append(
+                    LoopSite(i, sym, n.var, n.spatial, n.fanout, n.dim))
+        self.sym_order: Tuple[str, ...] = tuple(s.sym for s in self.sites)
+
+        st = analyze(einsum, arch, skeleton,
+                     bound_of=lambda l: Poly.sym(sym_by_id[id(l)]))
+        self.stats = st
+
+        # Energy polynomial (pJ).
+        energy = st.computes * arch.mac_energy
+        self.usage: Dict[int, Poly] = {}
+        latency_terms: List[Poly] = [
+            st.computes / (st.utilized_units * arch.frequency)
+        ]
+        for m, lvl in enumerate(arch.levels):
+            r = st.level_reads.get(m, Poly.const(0))
+            w = st.level_writes.get(m, Poly.const(0))
+            u = st.level_usage.get(m, None)
+            inst = st.level_instances.get(m, Poly.const(1))
+            if u is not None:
+                self.usage[m] = _as_poly(u)
+            energy = energy + _as_poly(r) * lvl.read_energy \
+                + _as_poly(w) * lvl.write_energy
+            if lvl.read_bandwidth is not None:
+                latency_terms.append(
+                    _as_poly(r) / (_as_mono(inst) * lvl.read_bandwidth))
+                latency_terms.append(
+                    _as_poly(w) / (_as_mono(inst) *
+                                   (lvl.write_bandwidth or lvl.read_bandwidth)))
+            else:
+                latency_terms.append(
+                    (_as_poly(r) + _as_poly(w)) / (_as_mono(inst) * lvl.bandwidth))
+        self.energy: Poly = _as_poly(energy)
+        self.latency: MaxExpr = MaxExpr(latency_terms)
+        self.utilized_units: Poly = _as_poly(st.utilized_units)
+
+        # Compiled evaluators (built lazily).
+        self._compiled: Optional[TileShapeOnlyModel] = None
+
+    @property
+    def tile_shape_model(self) -> "TileShapeOnlyModel":
+        if self._compiled is None:
+            self._compiled = TileShapeOnlyModel(self)
+        return self._compiled
+
+    def concretize(self, bounds: Sequence[int]) -> Mapping:
+        """Instantiate the skeleton with numeric loop bounds."""
+        out = list(self.skeleton)
+        for site, b in zip(self.sites, bounds):
+            l = out[site.index]
+            out[site.index] = Loop(l.var, int(b), l.spatial, l.fanout, l.dim)
+        return tuple(out)
+
+
+class TileShapeOnlyModel:
+    """Vectorized numeric evaluation of the curried expressions.
+
+    ``__call__`` takes an int array (n_candidates, n_loops) in site order and
+    returns (energy, latency, valid) arrays.
+    """
+
+    def __init__(self, cm: CurriedModel):
+        self.cm = cm
+        order = cm.sym_order
+        self._energy = CompiledExpr(cm.energy, order)
+        self._latency = CompiledExpr(cm.latency, order)
+        self._usage = [
+            (cm.arch.levels[m].capacity, CompiledExpr(p, order))
+            for m, p in sorted(cm.usage.items())
+            if cm.arch.levels[m].capacity != float("inf")
+        ]
+
+    def __call__(self, bounds: np.ndarray):
+        cols = bounds.astype(np.float64)
+        energy = self._energy(cols)
+        latency = self._latency(cols)
+        valid = np.ones(cols.shape[0], dtype=bool)
+        for cap, ucomp in self._usage:
+            valid &= ucomp(cols) <= cap
+        return energy, latency, valid
+
+
+def _as_poly(x) -> Poly:
+    if isinstance(x, Poly):
+        return x
+    return Poly.const(float(x))
+
+
+def _as_mono(x) -> Mono:
+    if isinstance(x, Poly):
+        assert len(x.monos) <= 1
+        return x.monos[0] if x.monos else Mono.make(0.0)
+    return Mono.make(float(x))

@@ -1,0 +1,348 @@
+"""Symbolic sum-of-product / max expression IR for the curried TCM model.
+
+The paper's tile-shape-only model (Eq. 4-6) is built from products of loop
+bounds, sums of those products, and max/min over them.  We represent:
+
+  * ``Mono``  — coeff * prod(sym_i ** exp_i), integer exponents (may be
+    negative: ``Computes / UtilizedUnits`` divides by spatial bounds).
+  * ``Poly``  — a sum of monomials, canonicalized by exponent-key.
+  * ``MaxExpr`` — max over polynomials (used for latency).
+
+All expressions support:
+  * ``subs(env)``     — partial evaluation (the paper's *currying*): known
+    symbols fold into coefficients, returning a smaller expression.
+  * ``evaluate(env)`` — full numeric evaluation; ``env`` values may be
+    numpy arrays, giving vectorized evaluation over candidate tile shapes
+    (our 1000x-fast tile-shape-only model).
+  * ``partition(known)`` — the paper's criteria rewrite rules: split sums
+    and maxes into per-term criteria, factor each monomial into its known
+    part (kept, as a minimize-criterion) and unknown part (dropped).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, Mapping, Sequence, Tuple, Union
+
+import numpy as np
+
+Env = Mapping[str, Union[int, float, np.ndarray]]
+
+
+def _canon_powers(powers: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted((s, e) for s, e in powers.items() if e != 0))
+
+
+@dataclass(frozen=True)
+class Mono:
+    """coeff * prod(sym**exp)."""
+
+    coeff: float
+    powers: Tuple[Tuple[str, int], ...]  # sorted, nonzero exponents
+
+    @staticmethod
+    def make(coeff: float, powers: Mapping[str, int] | None = None) -> "Mono":
+        return Mono(float(coeff), _canon_powers(powers or {}))
+
+    @staticmethod
+    def sym(name: str, exp: int = 1) -> "Mono":
+        return Mono(1.0, ((name, exp),) if exp else ())
+
+    @property
+    def is_const(self) -> bool:
+        return not self.powers
+
+    def symbols(self) -> frozenset:
+        return frozenset(s for s, _ in self.powers)
+
+    def __mul__(self, other: "Mono | float | int") -> "Mono":
+        if isinstance(other, (int, float)):
+            return Mono(self.coeff * other, self.powers)
+        pw = dict(self.powers)
+        for s, e in other.powers:
+            pw[s] = pw.get(s, 0) + e
+        return Mono(self.coeff * other.coeff, _canon_powers(pw))
+
+    def __truediv__(self, other: "Mono | float | int") -> "Mono":
+        if isinstance(other, (int, float)):
+            return Mono(self.coeff / other, self.powers)
+        pw = dict(self.powers)
+        for s, e in other.powers:
+            pw[s] = pw.get(s, 0) - e
+        return Mono(self.coeff / other.coeff, _canon_powers(pw))
+
+    def subs(self, env: Env) -> "Mono":
+        coeff = self.coeff
+        rest: Dict[str, int] = {}
+        for s, e in self.powers:
+            if s in env:
+                coeff *= float(env[s]) ** e
+            else:
+                rest[s] = e
+        return Mono(coeff, _canon_powers(rest))
+
+    def evaluate(self, env: Env):
+        out = self.coeff
+        for s, e in self.powers:
+            v = env[s]
+            out = out * (v ** e if e != 1 else v)
+        return out
+
+    def split(self, known: frozenset) -> Tuple["Mono", "Mono"]:
+        """Factor into (known_part_with_coeff, unknown_part)."""
+        kp: Dict[str, int] = {}
+        up: Dict[str, int] = {}
+        for s, e in self.powers:
+            (kp if s in known else up)[s] = e
+        return Mono(self.coeff, _canon_powers(kp)), Mono(1.0, _canon_powers(up))
+
+    def __repr__(self) -> str:
+        parts = [] if self.coeff == 1.0 and self.powers else [f"{self.coeff:g}"]
+        for s, e in self.powers:
+            parts.append(s if e == 1 else f"{s}^{e}")
+        return "*".join(parts) or "1"
+
+
+class Poly:
+    """Sum of monomials, canonicalized by power-key."""
+
+    __slots__ = ("monos",)
+
+    def __init__(self, monos: Iterable[Mono] = ()):  # canonicalizes
+        acc: Dict[Tuple[Tuple[str, int], ...], float] = {}
+        for m in monos:
+            acc[m.powers] = acc.get(m.powers, 0.0) + m.coeff
+        self.monos: Tuple[Mono, ...] = tuple(
+            Mono(c, p) for p, c in sorted(acc.items()) if c != 0.0
+        )
+
+    # -- constructors -------------------------------------------------
+    @staticmethod
+    def const(c: float) -> "Poly":
+        return Poly([Mono.make(c)])
+
+    @staticmethod
+    def sym(name: str, exp: int = 1) -> "Poly":
+        return Poly([Mono.sym(name, exp)])
+
+    @staticmethod
+    def product(syms: Sequence[str]) -> "Poly":
+        pw: Dict[str, int] = {}
+        for s in syms:
+            pw[s] = pw.get(s, 0) + 1
+        return Poly([Mono.make(1.0, pw)])
+
+    # -- algebra -------------------------------------------------------
+    def __add__(self, other: "Poly | float | int") -> "Poly":
+        if isinstance(other, (int, float)):
+            other = Poly.const(other)
+        return Poly(self.monos + other.monos)
+
+    def __radd__(self, other):
+        return self.__add__(other)
+
+    def __sub__(self, other: "Poly | float | int") -> "Poly":
+        if isinstance(other, (int, float)):
+            other = Poly.const(other)
+        return Poly(self.monos + tuple(m * -1.0 for m in other.monos))
+
+    def __rsub__(self, other):
+        return (self * -1.0).__add__(other)
+
+    def __mul__(self, other: "Poly | Mono | float | int") -> "Poly":
+        if isinstance(other, (int, float)):
+            return Poly(m * other for m in self.monos)
+        if isinstance(other, Mono):
+            return Poly(m * other for m in self.monos)
+        out = []
+        for a in self.monos:
+            for b in other.monos:
+                out.append(a * b)
+        return Poly(out)
+
+    def __rmul__(self, other):
+        return self.__mul__(other)
+
+    def __truediv__(self, other: "Poly | Mono | float | int") -> "Poly":
+        if isinstance(other, Poly):
+            assert len(other.monos) == 1, "can only divide by a monomial"
+            other = other.monos[0]
+        return Poly(m / other for m in self.monos)
+
+    @property
+    def is_const(self) -> bool:
+        return all(m.is_const for m in self.monos)
+
+    @property
+    def const_value(self) -> float:
+        assert self.is_const
+        return sum(m.coeff for m in self.monos) if self.monos else 0.0
+
+    def symbols(self) -> frozenset:
+        out: set = set()
+        for m in self.monos:
+            out |= m.symbols()
+        return frozenset(out)
+
+    def subs(self, env: Env) -> "Poly":
+        return Poly(m.subs(env) for m in self.monos)
+
+    def evaluate(self, env: Env):
+        if not self.monos:
+            return 0.0
+        out = self.monos[0].evaluate(env)
+        for m in self.monos[1:]:
+            out = out + m.evaluate(env)
+        return out
+
+    def __repr__(self) -> str:
+        return " + ".join(map(repr, self.monos)) or "0"
+
+    def __eq__(self, other) -> bool:  # structural equality
+        return isinstance(other, Poly) and self.monos == other.monos
+
+    def __hash__(self) -> int:
+        return hash(self.monos)
+
+
+class MaxExpr:
+    """max over polynomials.  Latency = max(mem terms..., compute term)."""
+
+    __slots__ = ("arms",)
+
+    def __init__(self, arms: Iterable[Poly]):
+        # dedupe structurally
+        seen = {}
+        for a in arms:
+            seen[hash(a)] = a
+        self.arms: Tuple[Poly, ...] = tuple(seen.values())
+
+    def subs(self, env: Env) -> "MaxExpr":
+        return MaxExpr(a.subs(env) for a in self.arms)
+
+    def evaluate(self, env: Env):
+        vals = [a.evaluate(env) for a in self.arms]
+        out = vals[0]
+        for v in vals[1:]:
+            out = np.maximum(out, v)
+        return out
+
+    def symbols(self) -> frozenset:
+        out: set = set()
+        for a in self.arms:
+            out |= a.symbols()
+        return frozenset(out)
+
+    def __repr__(self) -> str:
+        return "max(" + ", ".join(map(repr, self.arms)) + ")"
+
+
+Expr = Union[Poly, MaxExpr]
+
+
+# ---------------------------------------------------------------------------
+# Criteria generation (paper §V-D): partition + drop rewrite rules.
+#
+# For a minimize-objective polynomial  obj = sum_i c_i * K_i(known) * U_i(unk)
+# we *partition* the sum by unknown factor U: all terms sharing the same U are
+# summed into one criterion  crit_U(known) = sum c_i K_i.  For any completion
+# of the unknowns, obj = sum_U crit_U * U with U > 0, so if candidate A has
+# crit_U(A) <= crit_U(B) for every U then obj(A) <= obj(B) for every future —
+# dominance is sound even with negative coefficients (e.g. the -1 terms from
+# affine window extents and partial-sum revisit counts).  Criteria whose value
+# cannot differ between candidates (no known symbols) are *dropped*.  Max
+# expressions partition arm-wise (arm-wise <= implies max <=).
+# ---------------------------------------------------------------------------
+
+Criterion = Tuple[Tuple[float, Tuple[Tuple[str, int], ...]], ...]
+# a criterion is a sum of (coeff, known_powers) terms
+
+
+def grouped_criteria(polys: Sequence[Poly], known: frozenset) -> list[Criterion]:
+    """Partition each poly by unknown factor; return discriminating criteria."""
+    out: Dict[Criterion, None] = {}
+    for poly in polys:
+        groups: Dict[Tuple[Tuple[str, int], ...], list] = {}
+        for m in poly.monos:
+            kp, up = m.split(known)
+            groups.setdefault(up.powers, []).append((kp.coeff, kp.powers))
+        for terms in groups.values():
+            if all(not pw for _, pw in terms):
+                continue  # constant across candidates: drop
+            crit = tuple(sorted(terms, key=lambda t: t[1]))
+            out[crit] = None
+    return list(out.keys())
+
+
+def expr_polys(expr: Expr) -> Tuple[Poly, ...]:
+    if isinstance(expr, MaxExpr):
+        return expr.arms
+    return (expr,)
+
+
+def eval_criteria(crits: Sequence[Criterion], index: Mapping[str, int],
+                  cols: np.ndarray) -> np.ndarray:
+    """Evaluate criteria over candidate columns -> (n_candidates, n_crits)."""
+    n = cols.shape[0]
+    out = np.empty((n, len(crits)))
+    for j, crit in enumerate(crits):
+        acc = np.zeros(n)
+        for coeff, powers in crit:
+            t = np.full(n, coeff)
+            for s, e in powers:
+                c = cols[:, index[s]]
+                t = t * (c if e == 1 else c.astype(np.float64) ** e)
+            acc += t
+        out[:, j] = acc
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Vectorized compiled evaluation: Poly/MaxExpr -> f(array_env) -> array
+# ---------------------------------------------------------------------------
+
+class CompiledExpr:
+    """Compile an expression over a fixed symbol ordering into a closure that
+    evaluates over numpy arrays (candidates stacked along axis 0).
+
+    This is the deliverable "tile-shape-only model": built once per
+    (dataplacement, dataflow), then evaluated for millions of tile shapes.
+    """
+
+    def __init__(self, expr: Expr, sym_order: Sequence[str]):
+        self.sym_order = tuple(sym_order)
+        self.index = {s: i for i, s in enumerate(self.sym_order)}
+        if isinstance(expr, MaxExpr):
+            self._arms = [self._compile_poly(a) for a in expr.arms]
+            self._is_max = True
+        else:
+            self._arms = [self._compile_poly(expr)]
+            self._is_max = False
+
+    def _compile_poly(self, poly: Poly):
+        terms = []
+        for m in poly.monos:
+            idx = [self.index[s] for s, _ in m.powers]
+            exps = [e for _, e in m.powers]
+            terms.append((m.coeff, idx, exps))
+        return terms
+
+    def __call__(self, cols: np.ndarray) -> np.ndarray:
+        """cols: float array (n_candidates, n_syms) in sym_order."""
+        arms = []
+        for terms in self._arms:
+            acc = np.zeros(cols.shape[0])
+            for coeff, idx, exps in terms:
+                t = np.full(cols.shape[0], coeff)
+                for i, e in zip(idx, exps):
+                    c = cols[:, i]
+                    t = t * (c if e == 1 else c ** e)
+                acc += t
+            arms.append(acc)
+        if self._is_max:
+            return np.maximum.reduce(arms)
+        return arms[0]
+
+
+def lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)

@@ -1,0 +1,435 @@
+"""Tile-shape exploration with partial-tile-shape pruning (paper §V-D).
+
+Loops are explored one at a time (innermost first, exhausting each rank var
+before moving on — the order the paper found most effective).  Divisibility
+is maintained as a per-var remaining quotient; the *last-explored temporal*
+loop of each var absorbs the remainder, so every exact factorization is
+reachable.  Between steps, partial candidates are pruned by two sound rules,
+both instances of the paper's criterion "will result in worse metrics
+regardless of future tile shape choices" (§IV-C):
+
+  1. **Dominance** over criteria generated from the curried model
+     (``symbolic.grouped_criteria``) within cannot-compare groups keyed by
+     remaining quotients and remaining fanout capacity.
+
+  2. **Objective lower bounds vs an incumbent** (branch-and-bound): each
+     partial candidate's objective is bounded below by substituting, per
+     monomial, the unknown bounds that minimize it (1 for positive exponents,
+     the max feasible value for negative exponents; reversed for negative
+     coefficients).  Candidates whose bound already meets or exceeds the best
+     complete mapping found by a cheap beam dive are pruned.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .model import CurriedModel, LoopSite
+from .symbolic import Criterion, Poly, eval_criteria, expr_polys, grouped_criteria
+
+
+@dataclass
+class ExploreStats:
+    n_expanded: int = 0  # partial candidates generated across all steps
+    n_final: int = 0  # full tile shapes evaluated by the tile-shape model
+    n_pruned_dominated: int = 0
+    n_pruned_invalid: int = 0
+    n_pruned_bound: int = 0
+    max_frontier: int = 0
+
+
+@dataclass
+class ExploreResult:
+    bounds: np.ndarray  # best full assignment, site order
+    energy: float
+    latency: float
+    edp: float
+    stats: ExploreStats
+
+
+PARETO_EXACT_N = 2048
+
+
+def _divisors(n: int) -> np.ndarray:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return np.array(out, dtype=np.int64)
+
+
+def _objective(energy: np.ndarray, latency: np.ndarray, kind: str):
+    if kind == "edp":
+        return energy * latency
+    if kind == "energy":
+        return energy
+    if kind == "latency":
+        return latency
+    raise ValueError(kind)
+
+
+def _pareto_keep(C: np.ndarray) -> np.ndarray:
+    """Non-dominated rows mask (minimize all columns).
+
+    Exact for small groups; for large groups a sound O(n*K) filter first
+    drops rows weakly dominated by per-criterion-minimum references (one
+    representative per unique reference value is protected, so duplicates
+    cannot eliminate each other), then finishes exactly if tractable."""
+    n = C.shape[0]
+    if n <= 1:
+        return np.ones(n, dtype=bool)
+    if n > PARETO_EXACT_N:
+        refs_idx = sorted(set(np.argmin(C, axis=0).tolist())
+                          | {int(np.argmin(C.sum(axis=1)))})
+        # one representative per unique reference row
+        uniq: dict = {}
+        for ri in refs_idx:
+            uniq.setdefault(C[ri].tobytes(), ri)
+        dominated = np.zeros(n, dtype=bool)
+        for ri in uniq.values():
+            d = (C[ri][None, :] <= C).all(axis=1)
+            d[ri] = False
+            dominated |= d
+        keep = ~dominated
+        si = np.where(keep)[0]
+        if len(si) <= PARETO_EXACT_N:
+            sub = _pareto_keep_exact(C[si])
+            keep[si[~sub]] = False
+        return keep
+    return _pareto_keep_exact(C)
+
+
+def _pareto_keep_exact(C: np.ndarray, block: int = 128) -> np.ndarray:
+    """Exact weak-dominance filter via ascending-sum chunked scan.
+
+    A dominator has column-wise <= values hence <= sum, so rows in a chunk
+    can only be dominated by kept rows from earlier chunks or by
+    earlier/equal rows within the chunk (ties resolve to first occurrence)."""
+    n = C.shape[0]
+    if n <= 1:
+        return np.ones(n, dtype=bool)
+    order = np.argsort(C.sum(axis=1), kind="stable")
+    S = C[order]
+    kept = np.empty_like(C)
+    k = 0
+    keep_pos: List[int] = []
+    for start in range(0, n, block):
+        blk = S[start:start + block]
+        b = blk.shape[0]
+        if k:
+            # (k, b): kept[i] dominates blk[j]
+            dom = (kept[:k, None, :] <= blk[None, :, :]).all(-1).any(0)
+        else:
+            dom = np.zeros(b, dtype=bool)
+        # within-chunk: j dominated by earlier i in the same chunk
+        m = (blk[:, None, :] <= blk[None, :, :]).all(-1)
+        for j in range(b):
+            if dom[j]:
+                continue
+            if m[:j, j][~dom[:j]].any() if j else False:
+                dom[j] = True
+        surv = np.where(~dom)[0]
+        for j in surv:
+            kept[k] = blk[j]
+            k += 1
+            keep_pos.append(start + j)
+    mask = np.zeros(n, dtype=bool)
+    mask[order[np.array(keep_pos, dtype=np.int64)]] = True
+    return mask
+
+
+def _lb_terms(poly: Poly, known: frozenset,
+              var_of_sym: Dict[str, str],
+              unassigned_by_var: Dict[str, List[str]]) -> Criterion:
+    """Lower-bound a poly over completions, per monomial.
+
+    The unknown bounds of each rank var multiply exactly to the remaining
+    quotient ``rem_v`` (a per-candidate value exposed as pseudo-symbol
+    ``rem:v``).  For a positive-coefficient monomial, the constrained minimum
+    of  prod s_i^{e_i}  s.t.  prod_{s_i in var v} s_i = rem_v, s_i >= 1  puts
+    all mass on the smallest exponent: rem_v^{min_e} (absent unassigned syms
+    count as exponent 0).  Negative coefficients use the max exponent.
+    Returns criterion terms [(coeff, powers)] over columns extended with the
+    rem pseudo-symbols."""
+    terms = []
+    for m in poly.monos:
+        kp: List[Tuple[str, int]] = []
+        unk_exp: Dict[str, Dict[str, int]] = {}
+        for s, e in m.powers:
+            if s in known:
+                kp.append((s, e))
+            else:
+                v = var_of_sym[s]
+                unk_exp.setdefault(v, {})[s] = e
+        for v, exps in unk_exp.items():
+            es = [exps.get(s, 0) for s in unassigned_by_var[v]]
+            e_star = min(es) if m.coeff >= 0 else max(es)
+            if e_star != 0:
+                kp.append((f"rem:{v}", e_star))
+        terms.append((m.coeff, tuple(sorted(kp))))
+    return tuple(terms)
+
+
+class _Stepper:
+    """Shared expansion machinery over the site exploration order."""
+
+    def __init__(self, cm: CurriedModel, objective: str):
+        self.cm = cm
+        self.objective = objective
+        einsum, arch = cm.einsum, cm.arch
+        self.sites = cm.sites
+        n_sites = len(self.sites)
+
+        by_var: Dict[str, List[int]] = {}
+        for k, s in enumerate(self.sites):
+            by_var.setdefault(s.var, []).append(k)
+        var_order = sorted(
+            by_var, key=lambda v: -max(self.sites[k].index for k in by_var[v]))
+        self.explore_order: List[int] = []
+        self.absorber: Dict[int, bool] = {}
+        for v in var_order:
+            ks = sorted(by_var[v], key=lambda k: -self.sites[k].index)
+            temporal = [k for k in ks if not self.sites[k].spatial]
+            if temporal:
+                ab = temporal[-1]
+                ks = [k for k in ks if k != ab] + [ab]
+                self.absorber[ab] = True
+            self.explore_order.extend(ks)
+
+        self.sym_index = {s.sym: i for i, s in enumerate(self.sites)}
+        self.shapes = dict(einsum.rank_shapes)
+        self.vars_list = sorted(self.shapes)
+        self.var_idx = {v: i for i, v in enumerate(self.vars_list)}
+        self.fan_dims: List[Tuple[int, int, int]] = []
+        for fi, fan in enumerate(arch.fanouts):
+            for d, cap in enumerate(fan.dims):
+                self.fan_dims.append((fi, d, cap))
+        self.fd_idx = {(fi, d): i for i, (fi, d, _) in enumerate(self.fan_dims)}
+        self.divisor_cache: Dict[int, np.ndarray] = {}
+
+        # lower-bound machinery: rem pseudo-symbols indexed after the sites
+        self.var_of_sym = {s.sym: s.var for s in self.sites}
+        self.ext_index = dict(self.sym_index)
+        for vi, v in enumerate(self.vars_list):
+            self.ext_index[f"rem:{v}"] = n_sites + vi
+
+        self.usage_polys = list(cm.usage.values())
+        self.usage_caps = [arch.levels[m].capacity for m in cm.usage]
+        self.objective_polys = list(expr_polys(cm.latency)) + [cm.energy]
+        self.latency_arms = list(expr_polys(cm.latency))
+        all_known = frozenset(self.sym_index)
+        self.usage_crits = [
+            (grouped_criteria([p], all_known), cap)
+            for p, cap in zip(self.usage_polys, self.usage_caps)
+            if cap != float("inf")
+        ]
+
+    def init_state(self):
+        n_sites = len(self.sites)
+        cols = np.ones((1, n_sites), dtype=np.int64)
+        rem = np.array([[self.shapes[v] for v in self.vars_list]],
+                       dtype=np.int64)
+        fan_rem = (np.array([[c for (_, _, c) in self.fan_dims]],
+                            dtype=np.int64)
+                   if self.fan_dims else np.zeros((1, 0), dtype=np.int64))
+        return cols, rem, fan_rem
+
+    def expand(self, k: int, cols, rem, fan_rem):
+        """Expand one site; returns new (cols, rem, fan_rem) or None."""
+        site = self.sites[k]
+        vi = self.var_idx[site.var]
+        if self.absorber.get(k):
+            cols = cols.copy()
+            cols[:, k] = rem[:, vi]
+            rem = rem.copy()
+            rem[:, vi] = 1
+            return cols, rem, fan_rem
+        shape_v = self.shapes[site.var]
+        if shape_v not in self.divisor_cache:
+            self.divisor_cache[shape_v] = _divisors(shape_v)
+        divs = self.divisor_cache[shape_v]
+        new_cols, new_rem, new_fan = [], [], []
+        for d in divs:
+            mask = rem[:, vi] % d == 0
+            if site.spatial:
+                mask &= fan_rem[:, self.fd_idx[(site.fanout, site.dim)]] >= d
+            if not mask.any():
+                continue
+            c = cols[mask].copy()
+            c[:, k] = d
+            r = rem[mask].copy()
+            r[:, vi] //= d
+            f = fan_rem[mask]
+            if site.spatial:
+                f = f.copy()
+                f[:, self.fd_idx[(site.fanout, site.dim)]] //= d
+            new_cols.append(c)
+            new_rem.append(r)
+            new_fan.append(f)
+        if not new_cols:
+            return None
+        return (np.concatenate(new_cols), np.concatenate(new_rem),
+                np.concatenate(new_fan))
+
+    def usage_lower_ok(self, cols, assigned_set) -> np.ndarray:
+        """Monotone lower-bound validity mask."""
+        if not self.usage_crits:
+            return np.ones(cols.shape[0], dtype=bool)
+        lower = cols.astype(np.float64).copy()
+        unassigned = [i for i in range(len(self.sites))
+                      if i not in assigned_set]
+        if unassigned:
+            lower[:, unassigned] = 1.0
+        ok = np.ones(cols.shape[0], dtype=bool)
+        for crit, cap in self.usage_crits:
+            vals = eval_criteria(crit, self.sym_index, lower)
+            if vals.shape[1]:
+                ok &= vals[:, 0] <= cap
+        return ok
+
+    def objective_lower_bound(self, cols, rem, known: frozenset) -> np.ndarray:
+        """Sound lower bound of the objective for each partial candidate."""
+        ext = np.concatenate(
+            [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
+        unassigned_by_var: Dict[str, List[str]] = {v: [] for v in self.vars_list}
+        for s in self.sites:
+            if s.sym not in known:
+                unassigned_by_var[s.var].append(s.sym)
+        e_crit = _lb_terms(self.cm.energy, known, self.var_of_sym,
+                           unassigned_by_var)
+        e_lb = eval_criteria([e_crit], self.ext_index, ext)[:, 0]
+        arm_crits = [_lb_terms(a, known, self.var_of_sym, unassigned_by_var)
+                     for a in self.latency_arms]
+        arms = eval_criteria(arm_crits, self.ext_index, ext)
+        l_lb = arms.max(axis=1)
+        if self.objective == "edp":
+            return e_lb * l_lb
+        if self.objective == "energy":
+            return e_lb
+        return l_lb
+
+
+def _beam_incumbent(st: _Stepper, width: int = 64):
+    """Cheap beam dive for an initial incumbent (heuristic, sound to use as
+    an upper bound).  Returns (bounds, energy, latency, objective) or None."""
+    cols, rem, fan_rem = st.init_state()
+    assigned: set = set()
+    for k in st.explore_order:
+        out = st.expand(k, cols, rem, fan_rem)
+        if out is None:
+            return None
+        cols, rem, fan_rem = out
+        assigned.add(k)
+        ok = st.usage_lower_ok(cols, assigned)
+        if ok.any():
+            cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
+        if cols.shape[0] > width:
+            known = frozenset(st.sites[i].sym for i in assigned)
+            lb = st.objective_lower_bound(cols, rem, known)
+            top = np.argpartition(lb, width)[:width]
+            cols, rem, fan_rem = cols[top], rem[top], fan_rem[top]
+    done = (rem == 1).all(axis=1)
+    cols = cols[done]
+    if cols.shape[0] == 0:
+        return None
+    energy, latency, valid = st.cm.tile_shape_model(cols)
+    if not valid.any():
+        return None
+    obj = np.where(valid, _objective(energy, latency, st.objective), np.inf)
+    b = int(np.argmin(obj))
+    return cols[b], float(energy[b]), float(latency[b]), float(obj[b])
+
+
+def explore(cm: CurriedModel, objective: str = "edp",
+            prune_partial: bool = True,
+            debug: bool = False) -> Optional[ExploreResult]:
+    stats = ExploreStats()
+    if not cm.sites:
+        return None
+    st = _Stepper(cm, objective)
+
+    incumbent = _beam_incumbent(st) if prune_partial else None
+    inc_obj = incumbent[3] if incumbent is not None else np.inf
+
+    cols, rem, fan_rem = st.init_state()
+    assigned: List[int] = []
+
+    for step, k in enumerate(st.explore_order):
+        out = st.expand(k, cols, rem, fan_rem)
+        if out is None:
+            return _finish(None, incumbent, stats)
+        cols, rem, fan_rem = out
+        assigned.append(k)
+        stats.n_expanded += cols.shape[0]
+        last_step = step == len(st.explore_order) - 1
+        assigned_set = set(assigned)
+        known = frozenset(st.sites[i].sym for i in assigned)
+
+        # ---- validity lower-bound prune ----------------------------------
+        if not last_step:
+            ok = st.usage_lower_ok(cols, assigned_set)
+            stats.n_pruned_invalid += int((~ok).sum())
+            if not ok.any():
+                return _finish(None, incumbent, stats)
+            cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
+
+        # ---- branch-and-bound prune vs incumbent --------------------------
+        if prune_partial and not last_step and np.isfinite(inc_obj):
+            lb = st.objective_lower_bound(cols, rem, known)
+            ok = lb < inc_obj
+            stats.n_pruned_bound += int((~ok).sum())
+            if not ok.any():
+                return _finish(None, incumbent, stats)
+            cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
+
+        # ---- dominance prune over criteria --------------------------------
+        if prune_partial and not last_step and cols.shape[0] > 1:
+            crits = grouped_criteria(
+                st.objective_polys + st.usage_polys, known)
+            if crits:
+                C = eval_criteria(crits, st.sym_index,
+                                  cols.astype(np.float64))
+                keys = np.concatenate([rem, fan_rem], axis=1)
+                _, inv = np.unique(keys, axis=0, return_inverse=True)
+                keep = np.ones(cols.shape[0], dtype=bool)
+                for g in range(inv.max() + 1):
+                    gi = np.where(inv == g)[0]
+                    if len(gi) > 1:
+                        keep[gi] = _pareto_keep(C[gi])
+                stats.n_pruned_dominated += int((~keep).sum())
+                cols, rem, fan_rem = cols[keep], rem[keep], fan_rem[keep]
+        stats.max_frontier = max(stats.max_frontier, cols.shape[0])
+        if debug:
+            import time as _t
+            print(f"step {step}: site={st.sites[k].var}"
+                  f"{'(sp)' if st.sites[k].spatial else ''}"
+                  f" frontier={cols.shape[0]} t={_t.perf_counter():.1f}",
+                  flush=True)
+
+    done = (rem == 1).all(axis=1)
+    cols = cols[done]
+    if cols.shape[0] == 0:
+        return _finish(None, incumbent, stats)
+
+    energy, latency, valid = cm.tile_shape_model(cols)
+    stats.n_final = cols.shape[0]
+    if not valid.any():
+        return _finish(None, incumbent, stats)
+    obj = np.where(valid, _objective(energy, latency, objective), np.inf)
+    best = int(np.argmin(obj))
+    if incumbent is not None and incumbent[3] < obj[best]:
+        return _finish(None, incumbent, stats)
+    return ExploreResult(
+        bounds=cols[best],
+        energy=float(energy[best]),
+        latency=float(latency[best]),
+        edp=float(energy[best] * latency[best]),
+        stats=stats,
+    )
+
+
+def _finish(none, incumbent, stats) -> Optional[ExploreResult]:
+    if incumbent is None:
+        return None
+    bounds, energy, latency, _ = incumbent
+    return ExploreResult(bounds=bounds, energy=energy, latency=latency,
+                         edp=energy * latency, stats=stats)

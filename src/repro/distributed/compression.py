@@ -1,0 +1,81 @@
+"""int8 gradient compression with error feedback.
+
+For cross-pod (DCN-bandwidth) gradient reduction at 1000+ node scale:
+gradients are blockwise-quantized to int8 with a per-block f32 scale before
+the all-reduce (4x wire-format reduction), dequantized after, and the
+quantization residual is fed back into the next step's gradient (error
+feedback keeps SGD convergence unbiased in the long run).
+
+Usage (composes with any optimizer):
+
+    carry = init_error_feedback(grads_like)
+    grads_c, carry = compress_decompress(grads, carry)   # inside train_step
+
+The quantize->psum->dequantize collective form for shard_map contexts is
+``quantized_psum``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def init_error_feedback(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_decompress(grads, error_carry):
+    """Simulate the int8 wire format (with error feedback) for each leaf.
+
+    Returns (dequantized grads, new error carry).  On the wire this is the
+    exact tensor the all-reduce would move; composing with psum is linear so
+    quantize->reduce->dequantize == reduce(quantize->dequantize) up to the
+    per-participant scales (see ``quantized_psum``).
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quant(x)
+        deq = _dequant(q, s, g.shape)
+        return deq.astype(g.dtype), x - deq
+
+    out = jax.tree.map(one, grads, error_carry)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_e
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-wire all-reduce inside shard_map: each participant quantizes,
+    the int32-accumulated sum of quantized blocks is dequantized by the
+    summed scales (exact when scales are close; bounded error otherwise)."""
+    q, s = _quant(x)
+    qsum = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
+    ssum = jax.lax.psum(s, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return _dequant(qsum.astype(jnp.float32) / n * 1.0,
+                    ssum / n, x.shape)

@@ -1,0 +1,288 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter with logical axis names; the rules map
+logical names to mesh axes.  Two built-in modes:
+
+  * ``tp``      — tensor parallelism over 'model', data parallelism over
+                  ('pod','data'); params replicated across data.
+  * ``tp_fsdp`` — additionally shards the 'embed' axis over 'data'
+                  (ZeRO-3-style fully-sharded params + optimizer state),
+                  the configuration intended for 1000+ node runs.
+
+GSPMD handles non-divisible dimensions by padding (e.g. yi-34b's 56 heads on
+a 16-way model axis), at a waste factor recorded in the roofline notes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULES: Dict[str, Dict[str, Any]] = {
+    "tp": {
+        "embed": None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "mlp2": None,
+        "vocab": "model",
+        "expert": "model",
+        "layers": None,
+        "batch": ("pod", "data"),
+        "seq": None,
+        # sequence parallelism: residual-stream activations shard their
+        # sequence dim over 'model' between attention/MLP blocks
+        # (Korthikanti-style SP); skipped automatically when not divisible
+        # (e.g. decode steps with S=1).
+        "act_seq": "model",
+    },
+    # Pure data parallelism over every mesh axis: no intra-layer collectives;
+    # right-sizes small models (TP=16 on a 130M model trades compute for
+    # all-reduces).  Params/optimizer replicated (they're tiny).
+    "dp": {
+        "embed": None,
+        "heads": None,
+        "kv": None,
+        "mlp": None,
+        "mlp2": None,
+        "vocab": None,
+        "expert": None,
+        "layers": None,
+        "batch": ("pod", "data", "model"),
+        "seq": None,
+        "act_seq": None,
+    },
+    # Expert-parallel mode for large MoE: expert weights are stored exactly
+    # in their compute layout — experts over 'model', the ff dim over 'data'
+    # (a 256-way sharding with NO gather at use; the ff contraction
+    # all-reduces activations over 'data' instead).  Dense params stay
+    # model-sharded only.
+    "tp_ep": {
+        "embed": None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "data",
+        "mlp2": None,
+        "vocab": "model",
+        "expert": "model",
+        "layers": None,
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_seq": "model",
+    },
+    # ZeRO-3-style param/optimizer sharding: stacked per-layer params shard
+    # their LAYER dim over 'data' (+'pod'), so the scan's per-iteration
+    # dynamic-slice gathers exactly one layer's shard — the gather depends on
+    # the loop index and cannot be hoisted into a full-stack all-gather.
+    # Non-stacked params (embedding, lm_head) shard 'embed' over 'data'.
+    "tp_fsdp": {
+        "embed": "data",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "mlp2": None,
+        "vocab": "model",
+        "expert": "model",
+        "layers": ("pod", "data"),
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_seq": "model",
+    },
+}
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints: model code calls ``constrain(x, spec)``
+# with logical names; the active (mesh, rules) context is installed by the
+# step builders / dryrun.  No-op outside a context (single-host smoke tests).
+# --------------------------------------------------------------------------
+
+_ACTIVE: Dict[str, Any] = {"mesh": None, "mode": "tp"}
+
+
+class activation_sharding_ctx:
+    def __init__(self, mesh: Mesh, mode: str = "tp"):
+        self.mesh, self.mode = mesh, mode
+
+    def __enter__(self):
+        self.prev = dict(_ACTIVE)
+        _ACTIVE["mesh"], _ACTIVE["mode"] = self.mesh, self.mode
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.update(self.prev)
+        return False
+
+
+def constrain(x, spec: Tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical axis names (no-op w/o context).
+
+    Divisibility-aware: a logical axis whose mapped mesh extent does not
+    divide the corresponding dim is dropped (avoids involuntary-remat
+    reshardings, e.g. 8 KV heads on a 16-way model axis)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    rules = dict(RULES[_ACTIVE["mode"]])
+    pspec = spec_to_pspec(tuple(spec), rules, mesh)
+    fixed = []
+    for dim, entry in zip(x.shape, tuple(pspec) + (None,) * (x.ndim - len(pspec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        fixed.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def constrain_any(x, specs):
+    """Apply the first logical spec whose every mapped axis divides the
+    corresponding dim (e.g. shard attention heads over 'model' when the head
+    count divides, else fall back to context-parallel sequence sharding)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    rules = dict(RULES[_ACTIVE["mode"]])
+    for spec in specs:
+        pspec = spec_to_pspec(tuple(spec), rules, mesh)
+        ok = True
+        nontrivial = False
+        for dim, entry in zip(x.shape,
+                              tuple(pspec) + (None,) * (x.ndim - len(pspec))):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in names:
+                size *= mesh.shape[a]
+            if size > 1:
+                nontrivial = True
+            if dim % size != 0:
+                ok = False
+                break
+        if ok and nontrivial:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, pspec))
+    return constrain(x, specs[-1])
+
+
+def spec_to_pspec(spec: Tuple[Optional[str], ...], rules: Dict[str, Any],
+                  mesh: Mesh, dims: Optional[Tuple[int, ...]] = None) -> P:
+    """Logical spec -> PartitionSpec.  When ``dims`` is given, a mapping is
+    only taken if the mesh extent divides the dim — and the axis it would
+    have used stays free for a later logical axis (e.g. a 60-layer stack
+    can't shard 'layers' over 16, so 'embed' picks up 'data' instead)."""
+    axes = _mesh_axes(mesh)
+    out = []
+    used = set()
+    for i, logical in enumerate(spec):
+        if logical is None:
+            out.append(None)
+            continue
+        mapped = rules.get(logical)
+        if mapped is None:
+            out.append(None)
+            continue
+        if not isinstance(mapped, tuple):
+            mapped = (mapped,)
+        mapped = tuple(a for a in mapped if a in axes and a not in used)
+        if not mapped:
+            out.append(None)
+            continue
+        if dims is not None:
+            size = 1
+            for a in mapped:
+                size *= mesh.shape[a]
+            if dims[i] % size != 0:
+                # try a shrinking prefix of the mapped axes
+                while mapped and dims[i] % size != 0:
+                    size //= mesh.shape[mapped[-1]]
+                    mapped = mapped[:-1]
+                if not mapped or dims[i] % size != 0:
+                    out.append(None)
+                    continue
+        used.update(mapped)
+        out.append(mapped if len(mapped) > 1 else mapped[0])
+    return P(*out)
+
+
+def is_logical_spec(x) -> bool:
+    """A logical-axis spec leaf: tuple of axis names / None (may be empty)."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def shardings_for(specs, mesh: Mesh, mode: str = "tp", like=None):
+    """Map a specs pytree (tuples of logical names) to NamedShardings.
+
+    ``like``: optional abstract pytree (same structure) whose leaf shapes
+    gate each mapping by divisibility (pjit argument shardings must divide
+    exactly)."""
+    rules = RULES[mode]
+
+    def one(spec):
+        return NamedSharding(mesh, spec_to_pspec(tuple(spec), rules, mesh))
+
+    if like is None:
+        return jax.tree.map(one, specs, is_leaf=is_logical_spec)
+
+    def one_shaped(spec, leaf):
+        return NamedSharding(mesh, spec_to_pspec(
+            tuple(spec), rules, mesh, dims=tuple(leaf.shape)))
+
+    return jax.tree.map(one_shaped, specs, like, is_leaf=is_logical_spec)
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes), *([None] * extra_dims))
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(mesh, extra_dims=ndim - 1))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_sharding(cfg, mesh: Mesh, mode: str = "tp"):
+    """KV caches: batch over ('pod','data'), heads over 'model'; SSM/RG-LRU
+    states: batch over data axes.  Built structurally from an abstract cache."""
+    from repro.models import lm
+
+    def one(path_leaf):
+        # leaves: arrays whose shapes we inspect by ndim/kind
+        return None
+
+    # We shard by rank heuristics: leading 'layers' axis (stacked) then batch.
+    def shard_leaf(x):
+        nd = x.ndim
+        axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+        model = "model" if "model" in mesh.axis_names else None
+        if nd == 0 or x.shape == ():
+            return NamedSharding(mesh, P())
+        # stacked cache leaves: (L, B, ...) — batch axis second
+        if nd >= 5:
+            # (L, B, S, H, D) attention cache: shard B and heads
+            return NamedSharding(
+                mesh, P(None, tuple(axes), None, model, None))
+        if nd == 4:
+            # (L, B, ...) states
+            return NamedSharding(mesh, P(None, tuple(axes), None, None))
+        if nd == 3:
+            return NamedSharding(mesh, P(None, tuple(axes), None))
+        if nd == 2:
+            return NamedSharding(mesh, P(None, tuple(axes)))
+        return NamedSharding(mesh, P())
+
+    return shard_leaf

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,Sq,Hq,Dh); k/v: (B,Sk,Hkv,Dh)."""
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    kk = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+    s = s / math.sqrt(Dh)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    return out.astype(q.dtype)

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) in pure JAX.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)),  c = 8.
+
+Training/prefill uses ``lax.associative_scan`` over the linear recurrence;
+decode is the O(1) per-token update.  State is O(width) — independent of
+sequence length, so the hybrid family runs long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _init
+
+C_FACTOR = 8.0
+
+
+def rglru_params(cfg, key) -> Tuple[Dict, Dict]:
+    W = cfg.rglru_dim or cfg.d_model
+    ks = jax.random.split(key, 6)
+    dt = cfg.jparam_dtype
+    p = {
+        "w_x": _init(ks[0], (cfg.d_model, W), dt),
+        "w_y": _init(ks[1], (W, cfg.d_model), dt, scale=1.0 / math.sqrt(W)),
+        "conv": _init(ks[2], (cfg.d_conv, W), dt, scale=0.5),
+        "w_input_gate": _init(ks[3], (W, W), dt),
+        "w_a_gate": _init(ks[4], (W, W), dt),
+        "lam": jnp.ones((W,), dt) * 2.0,  # softplus(2) ~ 2.1
+    }
+    s = {
+        "w_x": ("embed", "mlp"),
+        "w_y": ("mlp", "embed"),
+        "conv": (None, "mlp"),
+        "w_input_gate": ("mlp", "mlp2"),
+        "w_a_gate": ("mlp", "mlp2"),
+        "lam": ("mlp",),
+    }
+    return p, s
+
+
+def _conv1d(x, w, conv_state=None):
+    Bsz, S, C = x.shape
+    K = w.shape[0]
+    pad = (jnp.zeros((Bsz, K - 1, C), x.dtype)
+           if conv_state is None else conv_state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    out = jnp.einsum("bskc,kc->bsc", xp[:, idx], w.astype(x.dtype))
+    return out, (xp[:, -(K - 1):] if K > 1 else None)
+
+
+def rglru_block(cfg, p, x, state=None):
+    """Returns (out, new_state); state = dict(h=(B,W) f32, conv=(B,K-1,W))."""
+    Bsz, S, D = x.shape
+    dt = cfg.jdtype
+    u = x @ p["w_x"].astype(dt)  # (B,S,W)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _conv1d(u, p["conv"], conv_state)
+
+    gate_i = jax.nn.sigmoid(u @ p["w_input_gate"].astype(dt))
+    gate_a = jax.nn.sigmoid(u @ p["w_a_gate"].astype(dt))
+    log_a = (-C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * gate_a.astype(jnp.float32))  # (B,S,W) < 0
+    a = jnp.exp(log_a)
+    gated = (gate_i * u).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if state is None or S > 1:
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+        a_sc, h = lax.associative_scan(combine, (a, b), axis=1)
+        h_last = h[:, -1]
+    else:
+        h_prev = state["h"]
+        h = a[:, 0] * h_prev + b[:, 0]
+        h_last = h
+        h = h[:, None]
+
+    y = h.astype(dt) @ p["w_y"].astype(dt)
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(cfg, batch: int):
+    W = cfg.rglru_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, W), cfg.jdtype),
+    }

@@ -1,0 +1,179 @@
+"""Mamba2 / SSD (state-space duality) blocks in pure JAX.
+
+Training uses the chunked dual form: quadratic attention-like computation
+within chunks + a linear recurrence over per-chunk states.  Decode is the
+O(1)-per-token recurrent update; state size is independent of sequence
+length (why this family runs the long_500k shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _init
+
+
+def ssm_params(cfg, key) -> Tuple[Dict, Dict]:
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.jparam_dtype
+    p = {
+        # projections: z (gate), x, B, C, dt
+        "w_in": _init(ks[0], (cfg.d_model, 2 * d_inner + 2 * N + cfg.ssm_heads), dt),
+        "conv": _init(ks[1], (cfg.d_conv, d_inner + 2 * N), dt, scale=0.5),
+        "A_log": jnp.zeros((cfg.ssm_heads,), dt) + math.log(1.0),
+        "D": jnp.ones((cfg.ssm_heads,), dt),
+        "dt_bias": jnp.zeros((cfg.ssm_heads,), dt),
+        "w_out": _init(ks[2], (d_inner, cfg.d_model), dt,
+                       scale=1.0 / math.sqrt(d_inner)),
+        "norm_scale": jnp.ones((d_inner,), dt),
+    }
+    s = {
+        "w_in": ("embed", "mlp"),
+        "conv": (None, "mlp"),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "w_out": ("mlp", "embed"),
+        "norm_scale": ("mlp",),
+    }
+    return p, s
+
+
+def _split_in(cfg, proj):
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    N = cfg.ssm_state
+    z, xBC, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, conv_state=None):
+    """Depthwise causal conv; returns (out, new_conv_state)."""
+    Bsz, S, C = xBC.shape
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((Bsz, K - 1, C), xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    windows = xp[:, idx]  # (B, S, K, C)
+    out = jnp.einsum("bskc,kc->bsc", windows, w.astype(xBC.dtype))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dtm, A):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   per-head inputs
+    Bm: (B, S, N)      input matrix (shared across heads, n_groups=1)
+    Cm: (B, S, N)      output matrix
+    dtm:(B, S, H)      softplus'd timestep (>0)
+    A:  (H,)           negative decay rate
+    Returns y: (B, S, H, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(cfg.ssm_chunk, S)
+    nc = (S + L - 1) // L
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dtm = jnp.pad(dtm, ((0, 0), (0, pad), (0, 0)))
+    # sequential scan over chunks: one chunk's quadratic intra term is live
+    # at a time (materializing all nc chunks' (L,L) decay tensors at once
+    # would be O(B*S*L*H) memory — catastrophic at 4k+ context)
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, L, H, P), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, L, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, L, N), 1, 0)
+    dtc = jnp.moveaxis(dtm.reshape(Bsz, nc, L, H).astype(jnp.float32), 1, 0)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(h, inp):
+        xk, bk, ck, dk = inp  # (B,L,H,P), (B,L,N), (B,L,N), (B,L,H)
+        logdec = dk * A.astype(jnp.float32)[None, None, :]  # (B,L,H)
+        cum = jnp.cumsum(logdec, axis=1)
+        # intra-chunk: y_j += sum_{i<=j} C_j.B_i dt_i x_i e^{cum_j - cum_i}
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,j,i,H)
+        gamma = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        cb = jnp.einsum("bjn,bin->bji", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))
+        y_intra = jnp.einsum("bji,bjih,bih,bihp->bjhp",
+                             cb, gamma, dk, xk.astype(jnp.float32))
+        # inter-chunk: y_j += C_j . (h * e^{cum_j})
+        y_inter = jnp.einsum("bjn,bjh,bhnp->bjhp",
+                             ck.astype(jnp.float32), jnp.exp(cum), h)
+        # state update: h' = e^{cum_L} h + sum_i e^{cum_L - cum_i} B_i dt_i x_i
+        end = cum[:, -1:, :]
+        w = jnp.exp(end - cum) * dk
+        s_c = jnp.einsum("bin,bih,bihp->bhnp", bk.astype(jnp.float32),
+                         w, xk.astype(jnp.float32))
+        h_new = h * jnp.exp(end[:, 0])[..., None, None] + s_c
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_last, ys = lax.scan(chunk_step, h0, (xc, Bc, Cc, dtc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssm_block(cfg, p, x, state=None):
+    """Full Mamba2 block.  state = dict(h=(B,H,N,P), conv=(B,K-1,C)) for
+    decode; None for training/prefill.  Returns (out, new_state)."""
+    Bsz, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_inner = H * P
+    dt = cfg.jdtype
+    proj = x @ p["w_in"].astype(dt)
+    z, xBC, dtraw = _split_in(cfg, proj)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, P)
+    dtm = jax.nn.softplus(dtraw.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if state is None or S > 1:
+        # training or prefill-from-scratch: chunked dual form
+        y, h_last = ssd_chunked(cfg, xs, Bm, Cm, dtm, A)
+    else:
+        # recurrent decode: h = h * exp(dt A) + dt B x ; y = C . h
+        h = state["h"]
+        dec = jnp.exp(dtm[:, 0] * A[None, :])  # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dtm[:, 0], xs[:, 0].astype(jnp.float32))
+        h_last = h * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32),
+                       h_last)[:, None]
+
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(dt)
+    # gated RMSNorm then output projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * lax.rsqrt(var + 1e-6)).astype(dt)
+    y = y * p["norm_scale"].astype(dt)
+    out = y @ p["w_out"].astype(dt)
+    new_state = {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    C = H * P + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, C), cfg.jdtype),
+    }

@@ -1,0 +1,128 @@
+"""AdamW and Adafactor in pure JAX, with f32 master accumulators that
+shard exactly like their parameters (specs pass through)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+    decay_steps: int = 10_000
+
+
+def lr_at(oc: OptConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup) / jnp.maximum(oc.decay_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(oc: OptConfig, params):
+    if oc.kind == "adamw":
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+    if oc.kind == "adafactor":
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(factored, params),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(oc.kind)
+
+
+def opt_state_specs(oc: OptConfig, specs):
+    """Sharding specs for the optimizer state, mirroring param specs."""
+    if oc.kind == "adamw":
+        return {"m": specs, "v": specs, "step": ()}
+    if oc.kind == "adafactor":
+        from repro.distributed.sharding import is_logical_spec
+
+        def factored(spec):
+            spec = tuple(spec)
+            if len(spec) >= 2:
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        return {"f": jax.tree.map(factored, specs, is_leaf=is_logical_spec),
+                "step": ()}
+    raise ValueError(oc.kind)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(oc: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_at(oc, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip else 1.0
+
+    if oc.kind == "adamw":
+        b1, b2 = oc.b1, oc.b2
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mh = m2 / (1 - b1 ** step.astype(jnp.float32))
+            vh = v2 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+    if oc.kind == "adafactor":
+        def upd(p, g, f):
+            g = g.astype(jnp.float32) * scale
+            if p.ndim >= 2:
+                vr = 0.999 * f["vr"] + 0.001 * jnp.mean(g * g, axis=-1)
+                vc = 0.999 * f["vc"] + 0.001 * jnp.mean(g * g, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                     1e-30)
+                prec = jnp.sqrt(r[..., None] * vc[..., None, :]) + oc.eps
+                delta = g / prec
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = 0.999 * f["v"] + 0.001 * g * g
+                delta = g / (jnp.sqrt(v) + oc.eps)
+                nf = {"v": v}
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), nf
+
+        leaves = jax.tree.map(
+            upd, params, grads, state["f"],
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+        new_p = jax.tree.map(lambda t: t[0], leaves,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_f = jax.tree.map(lambda t: t[1], leaves,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"f": new_f, "step": step}, gnorm
+    raise ValueError(oc.kind)

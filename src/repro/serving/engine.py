@@ -1,0 +1,110 @@
+"""Sharded serving steps: prefill and single-token decode.
+
+``make_serve_steps`` builds jit'd prefill/decode with explicit shardings:
+params per the logical rules; KV caches batch-sharded over ('pod','data')
+and kv-heads over 'model' when divisible (replicated otherwise — GQA with
+few KV heads keeps one copy per model group, the standard TP serving
+layout).  Decode donates the cache (in-place update round-trip)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import shardings_for
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _div(x: int, mesh: Mesh, names) -> bool:
+    s = _axis_size(mesh, names)
+    return s > 1 and x % s == 0
+
+
+def cache_shardings(cfg: ModelConfig, cache_abstract, mesh: Mesh):
+    """Structural sharding for a cache pytree (built from abstract shapes)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(x):
+        shp = x.shape
+        nd = len(shp)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        # stacked layer caches are (L, B, ...); states (L, B, ...)
+        bdim = 1 if nd >= 2 else 0
+        if _div(shp[bdim], mesh, batch_axes):
+            spec[bdim] = batch_axes
+        if nd >= 4:
+            # (L, B, S, H, D) or (L, B, H, N, P): try the head-ish dim
+            hdim = 3 if nd == 5 else 2
+            if spec[hdim] is None and _div(shp[hdim], mesh, "model"):
+                spec[hdim] = "model"
+            elif nd == 5 and _div(shp[2], mesh, "model"):
+                # GQA with kv_heads < model size: shard the KV sequence dim
+                # over 'model' instead (ring-attention-style cache layout)
+                spec[2] = "model"
+            if nd == 5 and spec[2] is None and shp[1] == 1 \
+                    and _div(shp[2], mesh, batch_axes):
+                # batch-1 long-context: shard the sequence dim over data
+                spec[2] = batch_axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_abstract)
+
+
+def batch_shardings(mesh: Mesh, batch_abstract):
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(x):
+        nd = len(x.shape)
+        if nd == 0 or not _div(x.shape[0], mesh, batch_axes):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(batch_axes, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_abstract)
+
+
+def make_serve_steps(cfg: ModelConfig, mesh: Mesh, specs, cache_abstract,
+                     batch_abstract, mode: str = "tp"):
+    param_sh = shardings_for(specs, mesh, mode)  # serve params: see caller
+    cache_sh = cache_shardings(cfg, cache_abstract, mesh)
+    batch_sh = batch_shardings(mesh, batch_abstract)
+
+    def prefill_fn(params, batch, cache):
+        return lm.prefill(cfg, params, batch, cache)
+
+    def decode_fn(params, tok, cache):
+        return lm.decode_step(cfg, params, tok, cache)
+
+    tok_abstract = jax.ShapeDtypeStruct(
+        (list(batch_abstract.values())[0].shape[0], 1), jnp.int32)
+    tok_sh = batch_shardings(mesh, {"tok": tok_abstract})["tok"]
+
+    prefill_step = jax.jit(
+        prefill_fn,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    decode_step = jax.jit(
+        decode_fn,
+        in_shardings=(param_sh, tok_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    return prefill_step, decode_step, (param_sh, batch_sh, cache_sh, tok_sh)

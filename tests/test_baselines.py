@@ -1,0 +1,55 @@
+"""Baseline mappers: sanity + the paper's qualitative claim (TCM <= baselines)."""
+import numpy as np
+import pytest
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.baselines import loma_like, timeloop_like
+from repro.core.einsum import matmul
+from repro.core.mapper import tcm_map
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ein = matmul("mm", 64, 32, 16)
+    arch = Arch(
+        "sp",
+        (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+         MemLevel("GLB", 2048, 1, 1, 1e9)),
+        fanouts=(SpatialFanout(above_level=1, dims=(8, 8),
+                               multicast_tensor=("A", None),
+                               reduce_tensor=(None, "Z")),),
+        mac_energy=0.5)
+    return ein, arch
+
+
+def test_timeloop_like_finds_valid(setup):
+    ein, arch = setup
+    r = timeloop_like(ein, arch, budget_evals=200, seed=1)
+    assert r.n_valid > 0
+    assert r.best is not None and r.best.valid
+
+
+def test_hint_beats_pure_random_usually(setup):
+    ein, arch = setup
+    rnd = timeloop_like(ein, arch, budget_evals=300, seed=2)
+    hint = timeloop_like(ein, arch, budget_evals=300, seed=2,
+                         full_spatial_hint=True)
+    # full-utilization hint should not be (much) worse on this workload
+    assert hint.objective() <= rnd.objective() * 1.5
+
+
+def test_loma_like_valid(setup):
+    ein, arch = setup
+    r = loma_like(ein, arch, budget_evals=200, lpf_limit=3, seed=3)
+    assert r.best is not None and r.best.valid
+
+
+def test_tcm_at_least_as_good_as_all_baselines(setup):
+    """The paper's Table III qualitative result: TCM (optimal) <= baselines."""
+    ein, arch = setup
+    best, _ = tcm_map(ein, arch)
+    assert best is not None
+    for r in (timeloop_like(ein, arch, 500, seed=4),
+              timeloop_like(ein, arch, 500, seed=4, full_spatial_hint=True),
+              loma_like(ein, arch, 500, lpf_limit=3, seed=4)):
+        assert best.edp <= r.objective("edp") * (1 + 1e-9)

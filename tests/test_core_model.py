@@ -1,0 +1,153 @@
+"""Unit tests for the analytical model (refmodel) against hand calculations."""
+import math
+
+import pytest
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.einsum import Einsum, TensorSpec, conv1d, matmul
+from repro.core.looptree import Loop, Storage, render, validate_structure
+from repro.core.refmodel import evaluate
+
+
+def two_level_arch(glb_cap=1 << 20, bw=1e9, re=1.0, we=1.0):
+    return Arch(
+        name="2level",
+        levels=(
+            MemLevel("DRAM", float("inf"), 100.0, 100.0, 1e8),
+            MemLevel("GLB", glb_cap, re, we, bw),
+        ),
+        mac_energy=0.5,
+        frequency=1e9,
+    )
+
+
+def test_matmul_hand_computed():
+    # Z[m,n] = A[m,k] B[k,n], M=4, K=8, N=2
+    ein = matmul("mm", 4, 8, 2)
+    arch = two_level_arch()
+    # DRAM keeps all; GLB keeps A then Z then B; loops:
+    #   m1=2 (above GLB:A), n1=2 (above GLB:Z), k1=2 above GLB:B,
+    #   m0=2, k0=4 below everything (n0=1 omitted)
+    mapping = (
+        Storage(0, "A"), Storage(0, "B"), Storage(0, "Z"),
+        Loop("m", 2),
+        Storage(1, "A"),
+        Loop("n", 2),
+        Storage(1, "Z"),
+        Loop("k", 2),
+        Storage(1, "B"),
+        Loop("m", 2), Loop("k", 4),
+    )
+    validate_structure(ein, arch, mapping)
+    res = evaluate(ein, arch, mapping)
+
+    # Hand-computed:
+    # GLB:A tile: loops below GLB:A = n1,k1,m0,k0 -> m extent 2, k extent
+    #   k1*k0 = 8 -> tile 16; fetched m1=2 times -> DRAM reads A = 32.
+    # GLB:Z tile: loops below = k1,m0,k0 -> m0=2, n extent 1 -> tile 2.
+    #   Fetches: loops above = m1*n1 = 4; no contraction loop above -> fc=1,
+    #   parent_writes = 2*4 = 8 = |Z| written exactly once, 0 readback.
+    # GLB:B tile: loops below = m0,k0 -> k extent 4, n extent 1 -> tile 4;
+    #   fetched m1*n1*k1 = 8 times -> DRAM reads B = 32.
+    # DRAM total reads = A 32 + B 32 = 64; DRAM writes = Z 8.
+    # computes = 2*2*2*2*4 = 64 MACs
+    # GLB writes = A 32 + B 32 + Z updates 64 = 128
+    # GLB reads = A 64 + B 64 (computes) + Z send 8 + Z updates 64 = 200
+    assert res.valid
+    assert res.reads[0] == 64
+    assert res.writes[0] == 8
+    assert res.reads[1] == 64 + 64 + 8 + 64
+    assert res.writes[1] == 32 + 32 + 64
+    assert res.usage[1] == 16 + 2 + 4
+    expected_energy = 64 * 0.5 + (64 + 8) * 100.0 + (200 + 128) * 1.0
+    assert math.isclose(res.energy, expected_energy)
+    # latency: max(compute 64/1e9, dram 72/1e8, glb 328/1e9)
+    assert math.isclose(res.latency, max(64 / 1e9, 72 / 1e8, 328 / 1e9))
+
+
+def test_capacity_violation_invalid():
+    ein = matmul("mm", 4, 8, 2)
+    arch = two_level_arch(glb_cap=5)
+    mapping = (
+        Storage(0, "A"), Storage(0, "B"), Storage(0, "Z"),
+        Loop("m", 4),
+        Storage(1, "A"), Storage(1, "B"), Storage(1, "Z"),
+        Loop("k", 8), Loop("n", 2),
+    )
+    validate_structure(ein, arch, mapping)
+    res = evaluate(ein, arch, mapping)
+    # A tile k=8, B tile k*n=16, Z tile n=2 -> 26 > 5
+    assert not res.valid
+    assert res.usage[1] == 8 + 16 + 2
+
+
+def test_spatial_multicast_discount():
+    # one fanout of 4 below GLB (dim multicasts A); A irrelevant var n spatial
+    ein = matmul("mm", 4, 4, 4)
+    arch = Arch(
+        name="sp",
+        levels=(
+            MemLevel("DRAM", float("inf"), 100.0, 100.0, 1e8),
+            MemLevel("GLB", 1 << 20, 1.0, 1.0, 1e9),
+            MemLevel("PE", 1 << 10, 0.1, 0.1, 1e9),
+        ),
+        fanouts=(SpatialFanout(above_level=1, dims=(4,),
+                               multicast_tensor=("A",)),),
+        mac_energy=0.5,
+        frequency=1e9,
+    )
+    mapping = (
+        Storage(0, "A"), Storage(0, "B"), Storage(0, "Z"),
+        Storage(1, "A"), Storage(1, "B"), Storage(1, "Z"),
+        Loop("n", 4, spatial=True, fanout=0, dim=0),
+        Storage(2, "A"), Storage(2, "B"), Storage(2, "Z"),
+        Loop("m", 4), Loop("k", 4),
+    )
+    validate_structure(ein, arch, mapping)
+    res = evaluate(ein, arch, mapping)
+    assert res.valid
+    # PE:A tile = m*k = 16 fetched once per instance; multicast -> GLB reads
+    # for A = 16 (not 64). B is not multicast: PE:B tile = k=4, fetched
+    # spatially 4x -> GLB reads for B = 16. PE:Z writes up 16, no revisit.
+    # GLB:Z itself sends the full Z (16) up to DRAM -> +16 GLB reads.
+    assert res.reads[1] == 16 + 16 + 16
+    assert res.utilization == 1.0
+
+
+def test_conv_line_buffer_and_halo():
+    # Z[p] = A[p+r] * W[r]; P=8, R=3. Single channel/batch.
+    ein = Einsum(
+        name="c",
+        tensors=(
+            TensorSpec("A", (("p", "r"),)),
+            TensorSpec("W", ("r",)),
+            TensorSpec("Z", ("p",), is_output=True),
+        ),
+        rank_shapes={"p": 8, "r": 3},
+    )
+    arch = two_level_arch()
+    # GLB keeps A with p loop above it (halo): p1=4 above, p0=2 r0=3 below.
+    mapping = (
+        Storage(0, "A"), Storage(0, "W"), Storage(0, "Z"),
+        Loop("p", 4),
+        Storage(1, "A"), Storage(1, "W"), Storage(1, "Z"),
+        Loop("p", 2), Loop("r", 3),
+    )
+    validate_structure(ein, arch, mapping)
+    res = evaluate(ein, arch, mapping)
+    # A tile extent = p0 + r0 - 1 = 4; without halo fetches = 4 tiles * 4 = 16
+    # with halo: covered = p1*p0 + r0 - 1 = 8+2 = 10 elements total.
+    # W tile = r0 = 3, refetched by the p1 loop above it 4x -> 12 (this is a
+    # non-helpful loop for W; exactly what TCM's Table-I pruning removes).
+    assert res.reads[0] == 10 + 12
+    assert res.valid
+
+
+def test_render_smoke():
+    ein = matmul("mm", 2, 2, 2)
+    mapping = (
+        Storage(0, "A"), Storage(0, "B"), Storage(0, "Z"),
+        Loop("m", 2), Loop("k", 2), Loop("n", 2),
+    )
+    s = render(mapping)
+    assert "keep A" in s and "for m" in s and "compute" in s

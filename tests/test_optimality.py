@@ -1,0 +1,122 @@
+"""TCM's central claim: the pruned search finds the *optimal* mapping.
+
+We validate against exhaustive enumeration of the unpruned mapspace on small
+workloads, including randomized (hypothesis) workload/architecture draws.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.bruteforce import brute_force_optimum
+from repro.core.einsum import Einsum, TensorSpec, matmul
+from repro.core.mapper import tcm_map
+
+RTOL = 1e-9
+
+
+def _check(ein, arch, objective="edp", keep_unit_loops=False):
+    best, _ = tcm_map(ein, arch, objective=objective)
+    bf = brute_force_optimum(ein, arch, objective=objective,
+                             keep_unit_loops=keep_unit_loops)
+    if bf is None:
+        assert best is None, "TCM found a mapping where none is valid"
+        return None, None
+    assert best is not None, "TCM found nothing but a valid mapping exists"
+    tcm_obj = best.objective(objective)
+    bf_obj = {"edp": bf.result.edp, "energy": bf.result.energy,
+              "latency": bf.result.latency}[objective]
+    assert tcm_obj <= bf_obj * (1 + RTOL), (
+        f"TCM suboptimal: {tcm_obj} > brute force {bf_obj}")
+    # TCM's space is a subset of the brute-force space, so it can't be better
+    assert tcm_obj >= bf_obj * (1 - RTOL), (
+        f"TCM better than brute force?! {tcm_obj} < {bf_obj} (model bug)")
+    return best, bf
+
+
+def test_matmul_two_level():
+    ein = matmul("mm", 4, 4, 2)
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", 12, 1, 1, 1e9)), mac_energy=0.5)
+    _check(ein, arch)
+
+
+def test_matmul_tight_capacity():
+    ein = matmul("mm", 4, 4, 4)
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", 6, 1, 1, 1e9)), mac_energy=0.5)
+    _check(ein, arch)
+
+
+def test_matmul_three_level():
+    ein = matmul("mm", 2, 4, 2)
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", 10, 2, 2, 1e9),
+                      MemLevel("RF", 4, 0.2, 0.2, 2e9)), mac_energy=0.5)
+    _check(ein, arch)
+
+
+def test_matmul_spatial():
+    ein = matmul("mm", 2, 4, 2)
+    arch = Arch(
+        "sp",
+        (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+         MemLevel("GLB", 24, 1, 1, 1e9)),
+        fanouts=(SpatialFanout(above_level=0, dims=(2, 2),
+                               multicast_tensor=("A", None),
+                               reduce_tensor=(None, "Z")),),
+        mac_energy=0.5)
+    _check(ein, arch)
+
+
+def test_objective_energy_and_latency():
+    ein = matmul("mm", 4, 4, 2)
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", 16, 1, 1, 1e9)), mac_energy=0.5)
+    _check(ein, arch, objective="energy")
+    _check(ein, arch, objective="latency")
+
+
+def test_conv_with_affine_dims():
+    # keep unit loops in brute force: adjacency (halo/line buffer) matters
+    ein = Einsum(
+        name="c",
+        tensors=(
+            TensorSpec("A", (("p", "r"),)),
+            TensorSpec("W", ("r",)),
+            TensorSpec("Z", ("p",), is_output=True),
+        ),
+        rank_shapes={"p": 4, "r": 3},
+    )
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", 8, 1, 1, 1e9)), mac_energy=0.5)
+    _check(ein, arch, keep_unit_loops=True)
+
+
+def test_restricted_level_tensors():
+    # a weight-buffer that may only hold B
+    ein = matmul("mm", 4, 4, 2)
+    arch = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("WB", 8, 0.5, 0.5, 1e9,
+                               allowed_tensors=("B",))), mac_energy=0.5)
+    _check(ein, arch)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    m=st.sampled_from([2, 3, 4]),
+    k=st.sampled_from([2, 4]),
+    n=st.sampled_from([2, 3]),
+    cap=st.sampled_from([4, 8, 16, 64]),
+    dram_e=st.sampled_from([50.0, 200.0]),
+    glb_e=st.sampled_from([0.5, 2.0]),
+    bw_ratio=st.sampled_from([5.0, 50.0]),
+)
+def test_property_tcm_matches_bruteforce(m, k, n, cap, dram_e, glb_e, bw_ratio):
+    ein = matmul("mm", m, k, n)
+    arch = Arch("a", (
+        MemLevel("DRAM", float("inf"), dram_e, dram_e, 1e9 / bw_ratio),
+        MemLevel("GLB", cap, glb_e, glb_e, 1e9)), mac_energy=0.5)
+    _check(ein, arch)

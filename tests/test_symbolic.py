@@ -1,0 +1,136 @@
+"""Symbolic engine unit tests + curried-model vs reference-model equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.dataflow import enumerate_skeletons
+from repro.core.dataplacement import enumerate_dataplacements
+from repro.core.einsum import conv1d, matmul
+from repro.core.model import CurriedModel
+from repro.core.refmodel import evaluate
+from repro.core.symbolic import (CompiledExpr, MaxExpr, Mono, Poly,
+                                 eval_criteria, grouped_criteria)
+
+
+def test_poly_algebra():
+    x = Poly.sym("x")
+    y = Poly.sym("y")
+    p = (x + 1) * (y - 1)
+    # xy - x + y - 1
+    assert p.evaluate({"x": 3, "y": 5}) == 3 * 5 - 3 + 5 - 1
+    q = p.subs({"x": 3})
+    assert q.evaluate({"y": 5}) == p.evaluate({"x": 3, "y": 5})
+    assert (x * y / Poly.sym("x")).evaluate({"x": 7, "y": 2}) == 2
+
+
+def test_poly_cancellation():
+    x = Poly.sym("x")
+    assert (x - x).monos == ()
+    assert (x * 0).monos == ()
+
+
+def test_maxexpr():
+    x, y = Poly.sym("x"), Poly.sym("y")
+    m = MaxExpr([x * 2, y + 3])
+    assert m.evaluate({"x": 10, "y": 1}) == 20
+    assert m.evaluate({"x": 1, "y": 100}) == 103
+    m2 = m.subs({"x": 1})
+    assert m2.evaluate({"y": 100}) == 103
+
+
+def test_compiled_expr_vectorized():
+    x, y = Poly.sym("x"), Poly.sym("y")
+    e = x * x * 3 + y - 2
+    c = CompiledExpr(e, ["x", "y"])
+    cols = np.array([[1.0, 2.0], [2.0, 10.0]])
+    np.testing.assert_allclose(c(cols), [3 + 2 - 2, 12 + 10 - 2])
+
+
+def test_grouped_criteria_dominance_soundness():
+    # obj = k*u - k2 (negative term); criteria group by unknown factor
+    k, k2, u = Poly.sym("k"), Poly.sym("k2"), Poly.sym("u")
+    obj = k * u - k2
+    crits = grouped_criteria([obj], frozenset({"k", "k2"}))
+    # two groups: {u: k} and {1: -k2}
+    assert len(crits) == 2
+    idx = {"k": 0, "k2": 1}
+    cols = np.array([[1.0, 5.0], [2.0, 5.0]])
+    vals = eval_criteria(crits, idx, cols)
+    # candidate 0 dominates candidate 1 (same -k2, smaller k)
+    assert (vals[0] <= vals[1]).all()
+
+
+def _rand_complete_bounds(rng, cm):
+    """Random exact factorization for each var across its sites."""
+    shapes = dict(cm.einsum.rank_shapes)
+    by_var = {}
+    for i, s in enumerate(cm.sites):
+        by_var.setdefault(s.var, []).append(i)
+    bounds = np.ones(len(cm.sites), dtype=np.int64)
+    caps = {}
+    for v, sites_i in by_var.items():
+        n = shapes[v]
+        for i in sites_i[:-1]:
+            divs = [d for d in range(1, n + 1) if n % d == 0]
+            s = cm.sites[i]
+            if s.spatial:
+                cap = caps.get((s.fanout, s.dim),
+                               cm.arch.fanouts[s.fanout].dims[s.dim])
+                divs = [d for d in divs if d <= cap]
+            d = int(rng.choice(divs))
+            bounds[i] = d
+            n //= d
+            if s.spatial:
+                caps[(s.fanout, s.dim)] = cap // d
+        # absorber: last site takes the remainder (must be temporal-feasible)
+        i = sites_i[-1]
+        s = cm.sites[i]
+        if s.spatial:
+            cap = caps.get((s.fanout, s.dim),
+                           cm.arch.fanouts[s.fanout].dims[s.dim])
+            if n > cap:
+                return None
+        bounds[i] = n
+    return bounds
+
+
+@pytest.mark.parametrize("ein,arch", [
+    (matmul("mm", 8, 4, 6),
+     Arch("a", (MemLevel("DRAM", float("inf"), 200, 200, 1e8),
+                MemLevel("GLB", 64, 1, 1, 1e9)), mac_energy=0.3)),
+    (conv1d("cv", P=6, R=3, C=2, Kc=2),
+     Arch("a", (MemLevel("DRAM", float("inf"), 200, 200, 1e8),
+                MemLevel("GLB", 48, 1, 1, 1e9)), mac_energy=0.3)),
+    (matmul("mm", 8, 4, 8),
+     Arch("sp", (MemLevel("DRAM", float("inf"), 200, 200, 1e8),
+                 MemLevel("GLB", 256, 1, 1, 1e9),
+                 MemLevel("PE", 32, 0.1, 0.1, 1e9)),
+          fanouts=(SpatialFanout(above_level=1, dims=(4, 2),
+                                 multicast_tensor=("A", None),
+                                 reduce_tensor=(None, "Z")),),
+          mac_energy=0.3)),
+])
+def test_curried_equals_reference(ein, arch):
+    """The symbolic curried model must agree with the numeric reference model
+    on every complete mapping (sampled across skeletons)."""
+    rng = np.random.default_rng(0)
+    n_checked = 0
+    for dp in enumerate_dataplacements(ein, arch):
+        for sk in enumerate_skeletons(ein, arch, dp):
+            cm = CurriedModel(ein, arch, sk)
+            for _ in range(3):
+                bounds = _rand_complete_bounds(rng, cm)
+                if bounds is None:
+                    continue
+                e, l, valid = cm.tile_shape_model(bounds[None, :])
+                mapping = cm.concretize(bounds)
+                ref = evaluate(ein, arch, mapping)
+                np.testing.assert_allclose(e[0], ref.energy, rtol=1e-9)
+                np.testing.assert_allclose(l[0], ref.latency, rtol=1e-9)
+                assert bool(valid[0]) == ref.valid
+                n_checked += 1
+        if n_checked > 200:
+            break
+    assert n_checked > 20
