@@ -42,13 +42,18 @@ def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
 _TCM_CACHE: Dict[tuple, tuple] = {}
 
 
-def cached_tcm(name: str, scale: str, ein, arch):
-    """Memoized tcm_map so benchmarks sharing workloads don't re-search."""
+def cached_tcm(name: str, scale: str, ein, arch, workers=None):
+    """Memoized tcm_map so benchmarks sharing workloads don't re-search.
+
+    ``workers`` selects the parallel search backend (``--workers`` on
+    ``benchmarks.run``); results are backend-independent (parity-tested) but
+    the recorded wall time is not, hence it is part of the cache key.
+    """
     from repro.core.mapper import tcm_map
 
-    key = (name, scale)
+    key = (name, scale, workers)
     if key not in _TCM_CACHE:
         t0 = time.perf_counter()
-        best, stats = tcm_map(ein, arch)
+        best, stats = tcm_map(ein, arch, workers=workers)
         _TCM_CACHE[key] = (best, stats, time.perf_counter() - t0)
     return _TCM_CACHE[key]

@@ -12,10 +12,10 @@ import time
 from .common import cached_tcm, csv_line, workloads
 
 
-def run(scale: str = "small") -> list:
+def run(scale: str = "small", workers=None) -> list:
     rows = []
     for name, (ein, arch) in workloads(scale).items():
-        _, s, dt = cached_tcm(name, scale, ein, arch)
+        _, s, dt = cached_tcm(name, scale, ein, arch, workers=workers)
         df_red = s.log10_total - s.log10_after_df_pruning
         ts_red = s.log10_after_df_pruning - s.log10_after_loop_pruning
         pt_red = s.log10_after_loop_pruning - s.log10_evaluated

@@ -30,7 +30,7 @@ def _matmul_extra_ranks(M: int, K: int, N: int, extra: int) -> Einsum:
     )
 
 
-def run(scale: str = "small") -> list:
+def run(scale: str = "small", workers=None) -> list:
     rows = []
     sizes = [2 ** p for p in ((8, 9, 10, 11, 12) if scale == "paper"
                               else (6, 8, 10))]
@@ -38,7 +38,7 @@ def run(scale: str = "small") -> list:
         ein = matmul(f"mm{size}", size, size, size)
         arch = tpu_v4i_like()
         t0 = time.perf_counter()
-        _, s = tcm_map(ein, arch)
+        _, s = tcm_map(ein, arch, workers=workers)
         dt = time.perf_counter() - t0
         rows.append({"sweep": "size", "x": size,
                      "log10_total": round(s.log10_total, 1),
@@ -51,7 +51,7 @@ def run(scale: str = "small") -> list:
         ein = _matmul_extra_ranks(base, base, base, extra)
         arch = tpu_v4i_like()
         t0 = time.perf_counter()
-        _, s = tcm_map(ein, arch)
+        _, s = tcm_map(ein, arch, workers=workers)
         dt = time.perf_counter() - t0
         rows.append({"sweep": "ranks", "x": extra,
                      "log10_total": round(s.log10_total, 1),

@@ -8,7 +8,8 @@ batch of tile shapes:
     vectorized numpy numeric evaluation).
   * curried-jax — the same expressions jit-compiled with JAX (our TPU-native
     expression of the paper's currying; included in the speedup table).
-Plus the tcm_map phase breakdown (the paper's right-hand pie).
+Plus the tcm_map phase breakdown (the paper's right-hand pie) and the
+serial-vs-parallel search-engine speedup (``--workers``).
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ from repro.core.dataplacement import enumerate_dataplacements
 from repro.core.mapper import tcm_map
 from repro.core.model import CurriedModel
 from repro.core.refmodel import evaluate
+from repro.core.search import clear_caches
 from repro.core.tileshape import _Stepper, explore
 
 from .common import csv_line, workloads
@@ -65,7 +67,7 @@ def _sample_full_bounds(cm, rng, n):
     return np.array(out) if out else None
 
 
-def run(scale: str = "small") -> list:
+def run(scale: str = "small", workers=None) -> list:
     name = "QK"
     ein, arch = workloads(scale)[name]
     dp = max(enumerate_dataplacements(ein, arch), key=len)
@@ -134,7 +136,10 @@ def run(scale: str = "small") -> list:
     print(csv_line("fig8/curried_jax", jax_us,
                    f"speedup={rows[0]['speedup_jax']}x"), flush=True)
 
-    # phase breakdown of the full mapper (paper Fig 8 right)
+    # phase breakdown of the full mapper (paper Fig 8 right); cold caches so
+    # the dataplacement/dataflow/curry shares aren't skewed by earlier
+    # benchmarks warming the structural memoization layer
+    clear_caches()
     _, s = tcm_map(ein, arch)
     total = max(s.t_total, 1e-9)
     rows.append({
@@ -146,4 +151,31 @@ def run(scale: str = "small") -> list:
     print(csv_line("fig8/breakdown", total * 1e6,
                    f"curry%={rows[1]['phase_curry_pct']};"
                    f"ts%={rows[1]['phase_tileshape_pct']}"), flush=True)
+
+    # serial vs parallel search-engine speedup on the same workload — only
+    # when parallelism was requested (--workers N, N > 1); a 1-worker
+    # comparison would be serial-vs-serial.  Caches are cleared before each
+    # run so both backends pay the same enumeration and currying cost.
+    if not workers or workers <= 1:
+        return rows
+    n_workers = workers
+    clear_caches()
+    t0 = time.perf_counter()
+    best_s, _ = tcm_map(ein, arch)
+    t_serial = time.perf_counter() - t0
+    clear_caches()
+    t0 = time.perf_counter()
+    best_p, _ = tcm_map(ein, arch, workers=n_workers)
+    t_parallel = time.perf_counter() - t0
+    assert best_p is not None and best_s is not None
+    assert best_p.edp == best_s.edp, "parallel backend changed the optimum"
+    rows.append({
+        "search_workers": n_workers,
+        "search_serial_s": round(t_serial, 3),
+        "search_parallel_s": round(t_parallel, 3),
+        "search_speedup": round(t_serial / max(t_parallel, 1e-9), 2),
+    })
+    print(csv_line("fig8/search_parallel", t_parallel * 1e6,
+                   f"workers={n_workers};"
+                   f"speedup={rows[-1]['search_speedup']}x"), flush=True)
     return rows

@@ -2,7 +2,10 @@
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--scale small|paper] [--only NAME]
+                                          [--workers N]
 
+``--workers N`` (N > 1) runs every TCM search through the process-pool
+search engine; fig8 additionally reports the serial-vs-parallel speedup.
 Prints ``name,us_per_call,derived`` CSV lines and writes a JSON dump to
 ``bench_results.json``.
 """
@@ -18,7 +21,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("small", "paper"), default="small")
     ap.add_argument("--only", default=None,
-                    help="table2|fig6|fig7|fig8|table3")
+                    choices=("table2", "fig6", "fig7", "fig8", "table3"))
+    ap.add_argument("--workers", type=int, default=None,
+                    help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args()
 
@@ -39,11 +44,12 @@ def main() -> None:
     results = {}
     for name, fn in benches.items():
         t0 = time.perf_counter()
-        results[name] = fn(scale=args.scale)
+        results[name] = fn(scale=args.scale, workers=args.workers)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr, flush=True)
     with open(args.out, "w") as f:
-        json.dump({"scale": args.scale, "results": results}, f, indent=2)
+        json.dump({"scale": args.scale, "workers": args.workers,
+                   "results": results}, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -12,10 +12,10 @@ import time
 from .common import cached_tcm, csv_line, workloads
 
 
-def run(scale: str = "small") -> list:
+def run(scale: str = "small", workers=None) -> list:
     rows = []
     for name, (ein, arch) in workloads(scale).items():
-        best, stats, dt = cached_tcm(name, scale, ein, arch)
+        best, stats, dt = cached_tcm(name, scale, ein, arch, workers=workers)
         rows.append({
             "einsum": name,
             "log10_total": round(stats.log10_total, 1),

@@ -14,12 +14,12 @@ from repro.core.mapper import tcm_map
 from .common import csv_line, workloads
 
 
-def run(scale: str = "small") -> list:
+def run(scale: str = "small", workers=None) -> list:
     from .common import cached_tcm
 
     name = "QK"
     ein, arch = workloads(scale)[name]
-    best, stats, t_tcm = cached_tcm(name, scale, ein, arch)
+    best, stats, t_tcm = cached_tcm(name, scale, ein, arch, workers=workers)
     assert best is not None
     # Budgets are reference-model evaluations; the baseline's full model is
     # ~1000x slower per eval than TCM's curried model (Fig 8), so equal-eval

@@ -2,25 +2,53 @@
 tiling of a TPU matmul kernel, and we validate the kernel against the oracle
 (interpret mode on CPU; drop interpret on a real TPU).
 
-  PYTHONPATH=src python examples/kernel_autotune.py
+  PYTHONPATH=src python examples/kernel_autotune.py [--workers N]
+
+``--workers N`` (N > 1) runs each tile search through the parallel search
+engine and reports the serial-vs-parallel timing.  NB: these block-unit
+searches are tiny (tens of ms), so process-pool startup dominates and serial
+usually wins here — the flag demonstrates the plumbing; for a workload where
+parallelism pays off, see ``benchmarks.run --only fig8 --workers N``.
 """
+import argparse
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotile import tcm_matmul_tiles
+from repro.core.search import clear_caches
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.ref import matmul_ref
 
 
 def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--workers", type=int, default=None,
+                        help="search-engine worker processes (default: serial)")
+    args = parser.parse_args()
+    parallel = args.workers is not None and args.workers > 1
+
     for (M, K, N) in [(1024, 1024, 1024), (4096, 768, 3072)]:
+        if parallel:
+            # serial baseline for the speedup report; cold caches both times
+            # so the two backends pay the same enumeration cost
+            clear_caches()
+            t0 = time.time()
+            tcm_matmul_tiles(M, K, N)
+            t_serial = time.time() - t0
+            clear_caches()
         t0 = time.time()
-        bm, bk, bn = tcm_matmul_tiles(M, K, N)
+        bm, bk, bn = tcm_matmul_tiles(M, K, N, workers=args.workers)
         dt = time.time() - t0
         print(f"matmul {M}x{K}x{N}: TCM tiles (bm,bk,bn)=({bm},{bk},{bn})"
               f"  [searched in {dt:.2f}s]")
+        if parallel:
+            ratio = t_serial / max(dt, 1e-9)
+            print(f"  serial {t_serial:.2f}s vs {args.workers} workers "
+                  f"{dt:.2f}s -> speedup {ratio:.2f}x"
+                  + ("  (pool startup dominates this tiny search)"
+                     if ratio < 1 else ""))
         vmem_bytes = 2 * (bm * bk + bk * bn + bm * bn)
         print(f"  VMEM working set {vmem_bytes/2**20:.1f} MiB; "
               f"MXU-aligned: {bm % 128 == 0 and bn % 128 == 0}")

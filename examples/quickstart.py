@@ -1,7 +1,8 @@
 """Quickstart: find the optimal mapping of a GPT-3-style einsum with TCM.
 
-  PYTHONPATH=src python examples/quickstart.py            # ~1 minute
-  PYTHONPATH=src python examples/quickstart.py --paper    # full GPT-3 6.7B QK
+  PYTHONPATH=src python examples/quickstart.py              # ~1 minute
+  PYTHONPATH=src python examples/quickstart.py --paper      # full GPT-3 6.7B QK
+  PYTHONPATH=src python examples/quickstart.py --workers 4  # parallel search
 """
 import argparse
 import time
@@ -15,13 +16,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true",
                     help="full GPT-3 6.7B shapes (minutes)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="search-engine worker processes (default: serial)")
     args = ap.parse_args()
     # the attention-score einsum of one GPT-3 decoder layer
     einsum = (gpt3_einsums() if args.paper else small_matmul_suite())["QK"]
     arch = tpu_v4i_like()
 
     t0 = time.time()
-    best, stats = tcm_map(einsum, arch, objective="edp")
+    best, stats = tcm_map(einsum, arch, objective="edp", workers=args.workers)
     dt = time.time() - t0
 
     print(f"searched {stats.log10_total:.0f} orders of magnitude of mappings"

@@ -13,6 +13,8 @@ from .looptree import Loop, Storage, render, validate_structure
 from .mapper import MapperStats, MappingResult, tcm_map, unpruned_mapspace_log10
 from .model import CurriedModel
 from .refmodel import EvalResult, evaluate
+from .search import (ProcessPoolEngine, SearchEngine, SerialEngine, WorkResult,
+                     WorkUnit, make_engine)
 
 __all__ = [
     "Arch", "MemLevel", "SpatialFanout",
@@ -21,4 +23,6 @@ __all__ = [
     "Loop", "Storage", "render", "validate_structure",
     "tcm_map", "MapperStats", "MappingResult", "unpruned_mapspace_log10",
     "CurriedModel", "EvalResult", "evaluate",
+    "SearchEngine", "SerialEngine", "ProcessPoolEngine", "WorkUnit",
+    "WorkResult", "make_engine",
 ]

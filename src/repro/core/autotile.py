@@ -57,10 +57,13 @@ def _tile_products(best, einsum, level: int = 1) -> Dict[str, int]:
 @lru_cache(maxsize=None)
 def tcm_matmul_tiles(M: int, K: int, N: int,
                      vmem_bytes: int = 16 * 2 ** 20,
-                     word_bytes: int = 2) -> Tuple[int, int, int]:
+                     word_bytes: int = 2,
+                     workers: int = None) -> Tuple[int, int, int]:
     """Optimal (bm, bk, bn) VMEM tile for Z[M,N] = A[M,K] @ B[K,N].
 
     Falls back to 128-aligned minima when a dim is smaller than the MXU.
+    ``workers`` > 1 fans the mapper's search out over a process pool (same
+    tiles either way; parity-tested).
     """
     mb = max(M // MXU, 1)
     kb = max(K // MXU, 1)
@@ -69,7 +72,7 @@ def tcm_matmul_tiles(M: int, K: int, N: int,
     vmem_blocks = vmem_bytes // word_bytes // (MXU * MXU)
     ein = matmul("mm", mb, kb, nb)
     arch = _v5e_core(vmem_blocks)
-    best, _ = tcm_map(ein, arch, objective="latency")
+    best, _ = tcm_map(ein, arch, objective="latency", workers=workers)
     if best is None:
         return (min(M, MXU), min(K, MXU), min(N, MXU))
     t = _tile_products(best, ein)

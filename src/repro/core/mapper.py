@@ -1,29 +1,31 @@
 """The Turbo-Charged Mapper driver (paper §V, Fig. 5).
 
 Pipeline: enumerate dataplacements -> per dataplacement, enumerate
-Pareto-relevant dataflow skeletons -> curry the model once per skeleton ->
-explore tile shapes with partial-tile-shape pruning -> track the global
-optimum.  Also accounts mapspace sizes (total vs non-pruned; Table II /
-Figs. 6-7) and phase runtimes (Fig. 8).
+Pareto-relevant dataflow skeletons -> materialize one work unit per
+(dataplacement, skeleton) -> dispatch the units through a search engine
+(``search.SerialEngine`` by default; ``search.ProcessPoolEngine`` for
+parallel runs) -> each unit curries the model once and explores tile shapes
+with partial-tile-shape pruning -> merge per-unit stats and reduce to the
+global optimum.  Also accounts mapspace sizes (total vs non-pruned;
+Table II / Figs. 6-7) and phase runtimes (Fig. 8).
+
+The reduction is order-identical across backends: units are merged in
+enumeration order with a strict ``<`` comparison, so the parallel backend
+returns bit-identical optima and stats to the serial one.
 """
 from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from .arch import Arch
-from .dataflow import count_unpruned_dataflows, enumerate_skeletons, make_slots
-from .dataplacement import count_dataplacements, enumerate_dataplacements
+from .dataflow import count_unpruned_dataflows, make_slots
 from .einsum import Einsum
 from .looptree import Loop, Mapping, validate_structure
-from .model import CurriedModel
-from .refmodel import EvalResult, evaluate
-from .tileshape import ExploreStats, explore
+from .search import (MapperStats, MappingResult, SearchEngine, WorkUnit,
+                     cached_dataplacements, cached_skeletons, make_engine)
 
 
 @lru_cache(maxsize=None)
@@ -53,40 +55,6 @@ def count_ordered_factorizations(n: int, slots: int) -> float:
     return total
 
 
-@dataclass
-class MapperStats:
-    # log10 mapspace sizes (Table II / Fig 6)
-    log10_total: float = 0.0
-    log10_after_df_pruning: float = 0.0  # dataflow pruning only
-    log10_after_loop_pruning: float = 0.0  # + tile-shape (loop) pruning
-    log10_evaluated: float = 0.0  # + partial tile-shape pruning
-    n_dataplacements: int = 0
-    n_skeletons: int = 0  # pruned |DF| summed over dataplacements
-    n_final_evals: int = 0
-    n_expanded: int = 0
-    n_pruned_dominated: int = 0
-    n_pruned_invalid: int = 0
-    n_pruned_bound: int = 0
-    # phase runtimes (Fig 8 breakdown)
-    t_dataplacement: float = 0.0
-    t_dataflow: float = 0.0
-    t_curry: float = 0.0
-    t_tileshape: float = 0.0
-    t_total: float = 0.0
-
-
-@dataclass
-class MappingResult:
-    mapping: Mapping
-    energy: float
-    latency: float
-    edp: float
-
-    def objective(self, kind: str) -> float:
-        return {"edp": self.edp, "energy": self.energy,
-                "latency": self.latency}[kind]
-
-
 def _log10_tileshapes(einsum: Einsum, positions_per_var: Dict[str, int]) -> float:
     out = 0.0
     for v, shape in einsum.rank_shapes.items():
@@ -99,7 +67,7 @@ def unpruned_mapspace_log10(einsum: Einsum, arch: Arch) -> float:
     """log10 |Mapspace| = |DP| * |DF| * |TS| without any pruning."""
     total = 0.0
     n_dp = 0
-    for dp in enumerate_dataplacements(einsum, arch):
+    for dp in cached_dataplacements(einsum, arch):
         n_dp += 1
         slots = make_slots(einsum, arch, dp)
         n_slots = len(slots)
@@ -111,31 +79,29 @@ def unpruned_mapspace_log10(einsum: Einsum, arch: Arch) -> float:
     return math.log10(max(total, 1.0))
 
 
-def tcm_map(
+def build_work_units(
     einsum: Einsum,
     arch: Arch,
-    objective: str = "edp",
-    prune_partial: bool = True,
-    collect_sizes: bool = True,
-    verbose: bool = False,
-) -> Tuple[Optional[MappingResult], MapperStats]:
-    stats = MapperStats()
-    t0 = time.perf_counter()
-    best: Optional[MappingResult] = None
+    objective: str,
+    prune_partial: bool,
+    collect_sizes: bool,
+    stats: MapperStats,
+) -> List[WorkUnit]:
+    """Materialize the dataplacement x skeleton cross-product.
 
+    Fills the driver-side fields of ``stats`` (dataplacement/dataflow counts,
+    enumeration timings and mapspace-size accumulators) as a side effect, in
+    the exact enumeration order the serial driver has always used.
+    """
     t = time.perf_counter()
-    dps = list(enumerate_dataplacements(einsum, arch))
+    dps = cached_dataplacements(einsum, arch)
     stats.n_dataplacements = len(dps)
     stats.t_dataplacement = time.perf_counter() - t
 
-    log_total = 0.0  # accumulated linearly in units of 10**300-capped logs
-    sum_total = 0.0
-    sum_df_pruned = 0.0
-    sum_loop_pruned = 0.0
-
+    units: List[WorkUnit] = []
     for dp in dps:
         t = time.perf_counter()
-        skeletons = list(enumerate_skeletons(einsum, arch, dp))
+        skeletons = cached_skeletons(einsum, arch, dp)
         stats.t_dataflow += time.perf_counter() - t
         stats.n_skeletons += len(skeletons)
 
@@ -146,10 +112,11 @@ def tcm_map(
             df_unpruned = count_unpruned_dataflows(einsum, arch, dp)
             ts_unpruned = _log10_tileshapes(
                 einsum, {v: n_slots + n_spatial for v in einsum.rank_shapes})
-            sum_total += 10 ** min(
+            stats.sum_total += 10 ** min(
                 math.log10(max(df_unpruned, 1.0)) + ts_unpruned - 300, 0)
             # dataflow pruning only: pruned DF count, unpruned tile shapes
-            sum_df_pruned += len(skeletons) * 10 ** min(ts_unpruned - 300, 0)
+            stats.sum_df_pruned += len(skeletons) * 10 ** min(
+                ts_unpruned - 300, 0)
 
         for sk in skeletons:
             if collect_sizes:
@@ -157,43 +124,58 @@ def tcm_map(
                 for n in sk:
                     if isinstance(n, Loop):
                         ppv[n.var] = ppv.get(n.var, 0) + 1
-                sum_loop_pruned += 10 ** min(
+                stats.sum_loop_pruned += 10 ** min(
                     _log10_tileshapes(einsum, ppv) - 300, 0)
+            units.append(WorkUnit(len(units), einsum, arch, sk,
+                                  objective, prune_partial))
+    return units
 
-            t = time.perf_counter()
-            cm = CurriedModel(einsum, arch, sk)
-            stats.t_curry += time.perf_counter() - t
 
-            t = time.perf_counter()
-            res = explore(cm, objective=objective, prune_partial=prune_partial)
-            stats.t_tileshape += time.perf_counter() - t
-            if res is None:
-                continue
-            stats.n_final_evals += res.stats.n_final
-            stats.n_expanded += res.stats.n_expanded
-            stats.n_pruned_dominated += res.stats.n_pruned_dominated
-            stats.n_pruned_invalid += res.stats.n_pruned_invalid
-            stats.n_pruned_bound += res.stats.n_pruned_bound
-            if best is None or _better(res, best, objective):
-                mapping = cm.concretize(res.bounds)
-                validate_structure(einsum, arch, mapping)
-                best = MappingResult(mapping, res.energy, res.latency, res.edp)
-        if verbose:
-            print(f"dp done: skeletons={len(skeletons)} "
-                  f"best={best.edp if best else None}")
+def tcm_map(
+    einsum: Einsum,
+    arch: Arch,
+    objective: str = "edp",
+    prune_partial: bool = True,
+    collect_sizes: bool = True,
+    verbose: bool = False,
+    engine: Optional[SearchEngine] = None,
+    backend: Optional[str] = None,
+    workers: Optional[int] = None,
+) -> Tuple[Optional[MappingResult], MapperStats]:
+    """Find the optimal mapping of ``einsum`` on ``arch``.
 
-    stats.log10_total = math.log10(max(sum_total, 1e-300)) + 300
-    stats.log10_after_df_pruning = math.log10(max(sum_df_pruned, 1e-300)) + 300
-    stats.log10_after_loop_pruning = (
-        math.log10(max(sum_loop_pruned, 1e-300)) + 300)
-    # "evaluated" = every point where the (curried) model is applied to a
-    # candidate: partial criteria/bound evaluations + final full evaluations
-    # (the paper counts tile-shape-only model invocations the same way).
-    stats.log10_evaluated = math.log10(max(stats.n_expanded, 1))
+    ``engine``/``backend``/``workers`` select the search executor: by default
+    (all three unset) the deterministic serial engine runs everything in this
+    process; ``workers=N`` (N > 1) or ``backend="process"`` fans the
+    dataplacement x skeleton work units out over a process pool.  Both
+    backends return bit-identical optima and stats.
+    """
+    stats = MapperStats()
+    t0 = time.perf_counter()
+
+    units = build_work_units(einsum, arch, objective, prune_partial,
+                             collect_sizes, stats)
+    if engine is None:
+        engine = make_engine(backend, workers)
+    if verbose:
+        print(f"dispatching {len(units)} work units "
+              f"({stats.n_dataplacements} dataplacements) "
+              f"via {engine.backend}")
+
+    best: Optional[MappingResult] = None
+    for r in engine.run(units):
+        stats.merge(r.stats)
+        c = r.candidate
+        if c is not None and (
+                best is None
+                or c.objective(objective) < best.objective(objective)):
+            best = c
+    if best is not None:
+        validate_structure(einsum, arch, best.mapping)
+    if verbose:
+        print(f"merged {len(units)} units: "
+              f"best={best.edp if best else None}")
+
+    stats.finalize()
     stats.t_total = time.perf_counter() - t0
     return best, stats
-
-
-def _better(res, best: MappingResult, objective: str) -> bool:
-    val = {"edp": res.edp, "energy": res.energy, "latency": res.latency}
-    return val[objective] < best.objective(objective)

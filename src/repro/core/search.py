@@ -1,0 +1,325 @@
+"""Parallel full-mapspace search engine (executor layer).
+
+The TCM driver (``mapper.tcm_map``) materializes the dataplacement x
+dataflow-skeleton cross-product as independent :class:`WorkUnit` records and
+dispatches them through a :class:`SearchEngine`.  Two backends are provided:
+
+  * :class:`SerialEngine` — runs every unit in the calling process, in unit
+    order.  Deterministic, zero overhead, and the default (tests and small
+    searches use it; it reproduces the historical single-loop behavior
+    bit-for-bit).
+  * :class:`ProcessPoolEngine` — fans units out over a
+    ``concurrent.futures.ProcessPoolExecutor`` with a configurable worker
+    count.  Results come back *in unit order* (``executor.map`` preserves
+    ordering), so the driver's merge — and therefore the selected optimum and
+    every accumulated statistic — is identical to the serial backend.
+
+Each unit curries the model once (``CurriedModel``), explores tile shapes
+with partial-tile-shape pruning, and returns a picklable
+``(candidate, stats)`` record.  Stats merge exactly: counters are integer
+sums, mapspace-size accumulators are kept in linear space and only converted
+to log10 at :meth:`MapperStats.finalize`, and phase timings are per-phase
+sums (in the process backend they are summed *across* workers, i.e. they
+measure aggregate CPU time, not wall time — wall time is ``t_total``).
+
+A memoization layer (``functools.lru_cache``) backs the enumeration entry
+points so repeated einsum shapes — common across the per-model configs in
+``repro.configs`` and across benchmark tables that share workloads — do not
+redo dataplacement/dataflow enumeration or model currying.  Cache keys are
+*structural*: two einsums that differ only in ``name`` share cache entries.
+"""
+from __future__ import annotations
+
+import math
+import multiprocessing as mp
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .arch import Arch
+from .dataflow import enumerate_skeletons
+from .dataplacement import Dataplacement, enumerate_dataplacements
+from .einsum import Einsum
+from .looptree import Mapping
+from .model import CurriedModel
+from .tileshape import explore
+
+# --------------------------------------------------------------------------
+# Statistics (moved here from mapper.py so both layers can share them;
+# mapper re-exports for backwards compatibility).
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class MapperStats:
+    # log10 mapspace sizes (Table II / Fig 6); set by ``finalize``
+    log10_total: float = 0.0
+    log10_after_df_pruning: float = 0.0  # dataflow pruning only
+    log10_after_loop_pruning: float = 0.0  # + tile-shape (loop) pruning
+    log10_evaluated: float = 0.0  # + partial tile-shape pruning
+    n_dataplacements: int = 0
+    n_skeletons: int = 0  # pruned |DF| summed over dataplacements
+    n_final_evals: int = 0
+    n_expanded: int = 0
+    n_pruned_dominated: int = 0
+    n_pruned_invalid: int = 0
+    n_pruned_bound: int = 0
+    # phase runtimes (Fig 8 breakdown).  Under the process backend t_curry /
+    # t_tileshape are summed across workers (aggregate CPU seconds).
+    t_dataplacement: float = 0.0
+    t_dataflow: float = 0.0
+    t_curry: float = 0.0
+    t_tileshape: float = 0.0
+    t_total: float = 0.0
+    # linear-space mapspace-size accumulators (units of 10**300-capped logs);
+    # kept linear so partial stats merge exactly, converted by ``finalize``
+    sum_total: float = 0.0
+    sum_df_pruned: float = 0.0
+    sum_loop_pruned: float = 0.0
+
+    def merge(self, other: "MapperStats") -> None:
+        """Accumulate another (partial) stats record into this one.
+
+        Everything is additive: integer counters and linear mapspace-size
+        accumulators merge exactly; timings become per-phase sums.  The
+        log10_* fields are NOT merged — call :meth:`finalize` once after all
+        partial records are in.
+        """
+        self.n_dataplacements += other.n_dataplacements
+        self.n_skeletons += other.n_skeletons
+        self.n_final_evals += other.n_final_evals
+        self.n_expanded += other.n_expanded
+        self.n_pruned_dominated += other.n_pruned_dominated
+        self.n_pruned_invalid += other.n_pruned_invalid
+        self.n_pruned_bound += other.n_pruned_bound
+        self.t_dataplacement += other.t_dataplacement
+        self.t_dataflow += other.t_dataflow
+        self.t_curry += other.t_curry
+        self.t_tileshape += other.t_tileshape
+        self.sum_total += other.sum_total
+        self.sum_df_pruned += other.sum_df_pruned
+        self.sum_loop_pruned += other.sum_loop_pruned
+
+    def finalize(self) -> None:
+        """Convert linear accumulators to the published log10 fields."""
+        self.log10_total = math.log10(max(self.sum_total, 1e-300)) + 300
+        self.log10_after_df_pruning = (
+            math.log10(max(self.sum_df_pruned, 1e-300)) + 300)
+        self.log10_after_loop_pruning = (
+            math.log10(max(self.sum_loop_pruned, 1e-300)) + 300)
+        # "evaluated" = every point where the (curried) model is applied to a
+        # candidate: partial criteria/bound evaluations + final full
+        # evaluations (the paper counts tile-shape-only model invocations the
+        # same way).
+        self.log10_evaluated = math.log10(max(self.n_expanded, 1))
+
+
+@dataclass
+class MappingResult:
+    mapping: Mapping
+    energy: float
+    latency: float
+    edp: float
+
+    def objective(self, kind: str) -> float:
+        return {"edp": self.edp, "energy": self.energy,
+                "latency": self.latency}[kind]
+
+
+# --------------------------------------------------------------------------
+# Memoized enumeration / currying
+# --------------------------------------------------------------------------
+
+EinsumKey = Tuple[tuple, Tuple[Tuple[str, int], ...]]
+
+
+def einsum_key(einsum: Einsum) -> EinsumKey:
+    """Structural cache key: tensors + rank shapes, ignoring ``name``."""
+    return (einsum.tensors, tuple(sorted(einsum.rank_shapes.items())))
+
+
+@lru_cache(maxsize=None)
+def _einsum_from_key(key: EinsumKey) -> Einsum:
+    return Einsum(name="<cached>", tensors=key[0], rank_shapes=dict(key[1]))
+
+
+@lru_cache(maxsize=512)
+def _dataplacements_cached(key: EinsumKey, arch: Arch
+                           ) -> Tuple[Dataplacement, ...]:
+    return tuple(enumerate_dataplacements(_einsum_from_key(key), arch))
+
+
+@lru_cache(maxsize=4096)
+def _skeletons_cached(key: EinsumKey, arch: Arch, dp: Dataplacement
+                      ) -> Tuple[Mapping, ...]:
+    return tuple(enumerate_skeletons(_einsum_from_key(key), arch, dp))
+
+
+@lru_cache(maxsize=512)
+def _curried_cached(key: EinsumKey, arch: Arch, skeleton: Mapping
+                    ) -> CurriedModel:
+    return CurriedModel(_einsum_from_key(key), arch, skeleton)
+
+
+def cached_dataplacements(einsum: Einsum, arch: Arch
+                          ) -> Tuple[Dataplacement, ...]:
+    return _dataplacements_cached(einsum_key(einsum), arch)
+
+
+def cached_skeletons(einsum: Einsum, arch: Arch, dp: Dataplacement
+                     ) -> Tuple[Mapping, ...]:
+    return _skeletons_cached(einsum_key(einsum), arch, dp)
+
+
+def cached_curried_model(einsum: Einsum, arch: Arch, skeleton: Mapping
+                         ) -> CurriedModel:
+    return _curried_cached(einsum_key(einsum), arch, skeleton)
+
+
+def clear_caches() -> None:
+    """Drop all memoized enumeration state (benchmark hygiene)."""
+    _einsum_from_key.cache_clear()
+    _dataplacements_cached.cache_clear()
+    _skeletons_cached.cache_clear()
+    _curried_cached.cache_clear()
+
+
+# --------------------------------------------------------------------------
+# Work units
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkUnit:
+    """One independent (dataplacement, dataflow-skeleton) search task."""
+
+    index: int  # position in the driver's enumeration order
+    einsum: Einsum
+    arch: Arch
+    skeleton: Mapping
+    objective: str = "edp"
+    prune_partial: bool = True
+
+
+@dataclass
+class WorkResult:
+    """Picklable outcome of one work unit: local optimum + partial stats."""
+
+    index: int
+    candidate: Optional[MappingResult]
+    stats: MapperStats
+
+
+def run_work_unit(unit: WorkUnit) -> WorkResult:
+    """Curry the model, explore tile shapes, return the unit's optimum.
+
+    Module-level (picklable) so it works under every multiprocessing start
+    method.  Mirrors the historical driver loop exactly: stats of skeletons
+    whose exploration yields no mapping are not accumulated.
+    """
+    stats = MapperStats()
+    t = time.perf_counter()
+    cm = cached_curried_model(unit.einsum, unit.arch, unit.skeleton)
+    stats.t_curry = time.perf_counter() - t
+
+    t = time.perf_counter()
+    res = explore(cm, objective=unit.objective,
+                  prune_partial=unit.prune_partial)
+    stats.t_tileshape = time.perf_counter() - t
+    if res is None:
+        return WorkResult(unit.index, None, stats)
+    stats.n_final_evals = res.stats.n_final
+    stats.n_expanded = res.stats.n_expanded
+    stats.n_pruned_dominated = res.stats.n_pruned_dominated
+    stats.n_pruned_invalid = res.stats.n_pruned_invalid
+    stats.n_pruned_bound = res.stats.n_pruned_bound
+    candidate = MappingResult(cm.concretize(res.bounds),
+                              res.energy, res.latency, res.edp)
+    return WorkResult(unit.index, candidate, stats)
+
+
+# --------------------------------------------------------------------------
+# Engines
+# --------------------------------------------------------------------------
+
+
+class SearchEngine:
+    """Executes a batch of work units; results must come back in unit order."""
+
+    backend = "abstract"
+
+    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+        raise NotImplementedError
+
+
+class SerialEngine(SearchEngine):
+    """In-process, in-order execution — deterministic reference backend."""
+
+    backend = "serial"
+
+    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+        return [run_work_unit(u) for u in units]
+
+
+def _default_start_method() -> str:
+    """Prefer a start method that does not fork the calling process.
+
+    Callers (benchmarks, examples) routinely import JAX, which is
+    multithreaded — plain ``fork`` of such a process can deadlock.  Both
+    ``forkserver`` (Linux: workers fork from a clean server process) and
+    ``spawn`` (everywhere) avoid inheriting the parent's threads; the worker
+    entry point ``run_work_unit`` is module-level, so both can pickle it.
+    """
+    methods = mp.get_all_start_methods()
+    return "forkserver" if "forkserver" in methods else "spawn"
+
+
+class ProcessPoolEngine(SearchEngine):
+    """Process-pool execution with a configurable worker count.
+
+    ``executor.map`` preserves unit order, so merging downstream is
+    order-identical to the serial backend.  Falls back to serial execution
+    when there is nothing to parallelize.
+    """
+
+    backend = "process"
+
+    def __init__(self, workers: Optional[int] = None,
+                 chunksize: Optional[int] = None,
+                 start_method: Optional[str] = None):
+        self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        self.chunksize = chunksize
+        self.start_method = start_method or _default_start_method()
+
+    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+        if self.workers <= 1 or len(units) <= 1:
+            return SerialEngine().run(units)
+        n_workers = min(self.workers, len(units))
+        # Unit costs are heavily skewed (one skeleton can dominate the whole
+        # search), so default to dynamic scheduling (chunksize 1); batching
+        # only pays off once there are very many units per worker.
+        chunksize = self.chunksize or max(1, len(units) // (n_workers * 64))
+        with ProcessPoolExecutor(
+                max_workers=n_workers,
+                mp_context=mp.get_context(self.start_method)) as ex:
+            return list(ex.map(run_work_unit, units, chunksize=chunksize))
+
+
+def make_engine(backend: Optional[str] = None,
+                workers: Optional[int] = None) -> SearchEngine:
+    """Resolve a backend name + worker count to an engine.
+
+    ``backend=None`` auto-selects: the process pool iff ``workers`` asks for
+    more than one worker, else the deterministic serial engine (the default
+    used by the test suite and by ``tcm_map`` with no arguments).
+    """
+    if backend is None:
+        backend = "process" if workers and workers > 1 else "serial"
+    if backend == "serial":
+        return SerialEngine()
+    if backend == "process":
+        return ProcessPoolEngine(workers=workers)
+    raise ValueError(f"unknown search backend {backend!r}")

@@ -1,0 +1,40 @@
+"""Randomized optimality checks (hypothesis property tests).
+
+Skips cleanly when the optional ``hypothesis`` dependency is not installed;
+``pip install hypothesis`` (or ``pip install -r requirements.txt``) enables
+it.  The deterministic optimality tests live in ``test_optimality.py`` and
+always run.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: pip install hypothesis "
+           "(see requirements.txt)")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.arch import Arch, MemLevel  # noqa: E402
+from repro.core.einsum import matmul  # noqa: E402
+
+from test_optimality import _check  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    m=st.sampled_from([2, 3, 4]),
+    k=st.sampled_from([2, 4]),
+    n=st.sampled_from([2, 3]),
+    cap=st.sampled_from([4, 8, 16, 64]),
+    dram_e=st.sampled_from([50.0, 200.0]),
+    glb_e=st.sampled_from([0.5, 2.0]),
+    bw_ratio=st.sampled_from([5.0, 50.0]),
+)
+def test_property_tcm_matches_bruteforce(m, k, n, cap, dram_e, glb_e, bw_ratio):
+    ein = matmul("mm", m, k, n)
+    arch = Arch("a", (
+        MemLevel("DRAM", float("inf"), dram_e, dram_e, 1e9 / bw_ratio),
+        MemLevel("GLB", cap, glb_e, glb_e, 1e9)), mac_energy=0.5)
+    _check(ein, arch)

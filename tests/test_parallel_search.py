@@ -1,0 +1,113 @@
+"""Parallel search engine: parity with the serial backend + executor units.
+
+The acceptance bar is bit-identical results: the process-pool backend must
+return the same optimal mapping (same EDP/energy/latency, same LoopTree) and
+the same merged mapspace-size stats as the deterministic serial backend.
+"""
+import pickle
+
+import pytest
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.einsum import conv1d, matmul
+from repro.core.mapper import build_work_units, tcm_map
+from repro.core.search import (MapperStats, ProcessPoolEngine, SerialEngine,
+                               cached_curried_model, cached_dataplacements,
+                               cached_skeletons, einsum_key, make_engine,
+                               run_work_unit)
+
+CASES = [
+    ("matmul", matmul("mm", 4, 4, 4),
+     Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                MemLevel("GLB", 12, 1, 1, 1e9)), mac_energy=0.5)),
+    ("conv", conv1d("cv", P=4, R=3, C=2, Kc=2),
+     Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                MemLevel("GLB", 16, 1, 1, 1e9)), mac_energy=0.5)),
+    ("spatial", matmul("mm", 2, 4, 2),
+     Arch("sp", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                 MemLevel("GLB", 24, 1, 1, 1e9)),
+          fanouts=(SpatialFanout(above_level=0, dims=(2, 2),
+                                 multicast_tensor=("A", None),
+                                 reduce_tensor=(None, "Z")),),
+          mac_energy=0.5)),
+]
+
+STAT_FIELDS = (
+    "log10_total", "log10_after_df_pruning", "log10_after_loop_pruning",
+    "log10_evaluated", "n_dataplacements", "n_skeletons", "n_final_evals",
+    "n_expanded", "n_pruned_dominated", "n_pruned_invalid", "n_pruned_bound",
+)
+
+
+@pytest.mark.parametrize("name,ein,arch", CASES, ids=[c[0] for c in CASES])
+def test_parallel_matches_serial(name, ein, arch):
+    best_s, st_s = tcm_map(ein, arch)
+    best_p, st_p = tcm_map(ein, arch, workers=2)
+    assert best_s is not None and best_p is not None
+    # bit-identical optimum
+    assert best_p.edp == best_s.edp
+    assert best_p.energy == best_s.energy
+    assert best_p.latency == best_s.latency
+    assert best_p.mapping == best_s.mapping
+    # exact merged mapspace-size stats
+    for f in STAT_FIELDS:
+        assert getattr(st_p, f) == getattr(st_s, f), f
+
+
+def test_parallel_matches_serial_other_objectives():
+    _, ein, arch = CASES[0]
+    for objective in ("energy", "latency"):
+        best_s, _ = tcm_map(ein, arch, objective=objective)
+        best_p, _ = tcm_map(ein, arch, objective=objective, workers=2)
+        assert best_p.objective(objective) == best_s.objective(objective)
+        assert best_p.mapping == best_s.mapping
+
+
+def test_make_engine_selection():
+    assert isinstance(make_engine(), SerialEngine)
+    assert isinstance(make_engine(workers=1), SerialEngine)
+    assert isinstance(make_engine(workers=3), ProcessPoolEngine)
+    assert make_engine(workers=3).workers == 3
+    assert isinstance(make_engine(backend="serial", workers=8), SerialEngine)
+    assert isinstance(make_engine(backend="process"), ProcessPoolEngine)
+    with pytest.raises(ValueError):
+        make_engine(backend="gpu")
+
+
+def test_work_units_picklable_and_runnable():
+    _, ein, arch = CASES[0]
+    units = build_work_units(ein, arch, "edp", True, True, MapperStats())
+    assert units and [u.index for u in units] == list(range(len(units)))
+    unit = pickle.loads(pickle.dumps(units[0]))
+    result = run_work_unit(unit)
+    assert result.index == 0
+    blob = pickle.loads(pickle.dumps(result))  # results cross processes too
+    assert blob.stats.t_tileshape >= 0.0
+
+
+def test_stats_merge_is_exact():
+    a = MapperStats(n_expanded=3, n_final_evals=1, sum_total=1e-3,
+                    t_curry=0.5)
+    b = MapperStats(n_expanded=7, n_final_evals=2, sum_total=2e-3,
+                    t_curry=0.25)
+    a.merge(b)
+    assert a.n_expanded == 10
+    assert a.n_final_evals == 3
+    assert a.sum_total == 3e-3
+    assert a.t_curry == 0.75
+
+
+def test_structural_memoization_shares_across_names():
+    """Two einsums differing only in name hit the same cache entries."""
+    _, ein, arch = CASES[0]
+    renamed = matmul("other_name", 4, 4, 4)
+    assert einsum_key(ein) == einsum_key(renamed)
+    dps_a = cached_dataplacements(ein, arch)
+    dps_b = cached_dataplacements(renamed, arch)
+    assert dps_a is dps_b  # same tuple object => cache hit
+    sk_a = cached_skeletons(ein, arch, dps_a[0])
+    sk_b = cached_skeletons(renamed, arch, dps_a[0])
+    assert sk_a is sk_b
+    cm_a = cached_curried_model(ein, arch, sk_a[0])
+    cm_b = cached_curried_model(renamed, arch, sk_a[0])
+    assert cm_a is cm_b

@@ -1,8 +1,6 @@
 """Symbolic engine unit tests + curried-model vs reference-model equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.arch import Arch, MemLevel, SpatialFanout
 from repro.core.dataflow import enumerate_skeletons
