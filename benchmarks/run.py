@@ -21,14 +21,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("small", "paper"), default="small")
     ap.add_argument("--only", default=None,
-                    choices=("table2", "fig6", "fig7", "fig8", "table3"))
+                    choices=("table2", "fig6", "fig7", "fig8", "table3",
+                             "table4"))
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args()
 
     from . import fig6_breakdown, fig7_scaling, fig8_model_speed
-    from . import table2_pruning, table3_edp
+    from . import table2_pruning, table3_edp, table4_network_edp
 
     benches = {
         "table2": table2_pruning.run,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig7": fig7_scaling.run,
         "fig8": fig8_model_speed.run,
         "table3": table3_edp.run,
+        "table4": table4_network_edp.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

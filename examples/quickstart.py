@@ -7,9 +7,11 @@
 import argparse
 import time
 
+from repro.configs import get_config
 from repro.core import render, tcm_map
 from repro.core.baselines import loma_like, timeloop_like
 from repro.core.presets import gpt3_einsums, small_matmul_suite, tpu_v4i_like
+from repro.netmap import MappingCache, map_network
 
 
 def main():
@@ -39,6 +41,17 @@ def main():
     loma = loma_like(einsum, arch, budget_evals=2000, seed=0)
     print(f"\nrandom-sampling baseline: {rnd.objective('edp') / best.edp:.2f}x"
           f" optimal;  LOMA-like: {loma.objective('edp') / best.edp:.2f}x")
+
+    # whole-model mapping: every layer of a real config in one call, with
+    # repeated shapes deduplicated and persisted in .tcm_cache/ (re-running
+    # this script serves the mappings from disk in milliseconds)
+    report = map_network(get_config("qwen1_5_0_5b"), arch, mode="decode",
+                         batch=2, seq=128, cache=MappingCache(),
+                         workers=args.workers)
+    print(f"\nwhole-model mapping ({report.config}): "
+          f"{len(report.rows)} layer ops -> {len(report.unique)} searches, "
+          f"network EDP {report.total_edp:.4g} pJ*s "
+          f"(cache hit rate {report.cache_hit_rate:.0%})")
 
 
 if __name__ == "__main__":

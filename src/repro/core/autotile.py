@@ -54,6 +54,25 @@ def _tile_products(best, einsum, level: int = 1) -> Dict[str, int]:
     return out
 
 
+def tcm_model_tiles(cfg, mode: str = "prefill", batch: int = 1,
+                    seq: int = 1024, vmem_bytes: int = 16 * 2 ** 20,
+                    word_bytes: int = 2, workers: int = None
+                    ) -> Dict[str, Tuple[int, int, int]]:
+    """BlockSpec tiles for every matmul of a whole model, in one call.
+
+    Delegates to the network planner (``repro.netmap``): the model's layer
+    einsums are extracted and deduplicated, and each unique (M, K, N) goes
+    through :func:`tcm_matmul_tiles` (memoized).  Returns
+    ``{"L<layer>.<op>": (bm, bk, bn)}`` keyed like the planner's report, so
+    kernels can look up the tile for the exact op they are lowering.
+    """
+    from repro.netmap.planner import network_blockspec_tiles
+
+    return network_blockspec_tiles(cfg, mode=mode, batch=batch, seq=seq,
+                                   vmem_bytes=vmem_bytes,
+                                   word_bytes=word_bytes, workers=workers)
+
+
 @lru_cache(maxsize=None)
 def tcm_matmul_tiles(M: int, K: int, N: int,
                      vmem_bytes: int = 16 * 2 ** 20,

@@ -155,7 +155,8 @@ def tcm_map(
 
     units = build_work_units(einsum, arch, objective, prune_partial,
                              collect_sizes, stats)
-    if engine is None:
+    owns_engine = engine is None
+    if owns_engine:
         engine = make_engine(backend, workers)
     if verbose:
         print(f"dispatching {len(units)} work units "
@@ -163,13 +164,19 @@ def tcm_map(
               f"via {engine.backend}")
 
     best: Optional[MappingResult] = None
-    for r in engine.run(units):
-        stats.merge(r.stats)
-        c = r.candidate
-        if c is not None and (
-                best is None
-                or c.objective(objective) < best.objective(objective)):
-            best = c
+    try:
+        for r in engine.run(units):
+            stats.merge(r.stats)
+            c = r.candidate
+            if c is not None and (
+                    best is None
+                    or c.objective(objective) < best.objective(objective)):
+                best = c
+    finally:
+        # engines passed in by the caller stay open (netmap reuses one pool
+        # across a whole model's searches); self-made ones are torn down
+        if owns_engine:
+            engine.close()
     if best is not None:
         validate_structure(einsum, arch, best.mapping)
     if verbose:

@@ -34,7 +34,7 @@ import math
 import multiprocessing as mp
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -254,6 +254,9 @@ class SearchEngine:
     def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
         raise NotImplementedError
 
+    def close(self) -> None:
+        """Release executor resources (worker pools); no-op by default."""
+
 
 class SerialEngine(SearchEngine):
     """In-process, in-order execution — deterministic reference backend."""
@@ -283,6 +286,12 @@ class ProcessPoolEngine(SearchEngine):
     ``executor.map`` preserves unit order, so merging downstream is
     order-identical to the serial backend.  Falls back to serial execution
     when there is nothing to parallelize.
+
+    The pool is created lazily on first use and **persists across ``run``
+    calls**, so batch drivers that search many einsums through one engine
+    (``repro.netmap``) pay the worker start-up cost once.  Call
+    :meth:`close` when done — a dropped engine's workers are only reaped at
+    interpreter exit (``ProcessPoolExecutor`` has no ``__del__``).
     """
 
     backend = "process"
@@ -293,19 +302,35 @@ class ProcessPoolEngine(SearchEngine):
         self.workers = int(workers) if workers else (os.cpu_count() or 1)
         self.chunksize = chunksize
         self.start_method = start_method or _default_start_method()
+        self._executor: Optional[ProcessPoolExecutor] = None
+
+    def _get_executor(self) -> ProcessPoolExecutor:
+        if self._executor is None:
+            self._executor = ProcessPoolExecutor(
+                max_workers=self.workers,
+                mp_context=mp.get_context(self.start_method))
+        return self._executor
 
     def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
         if self.workers <= 1 or len(units) <= 1:
             return SerialEngine().run(units)
-        n_workers = min(self.workers, len(units))
         # Unit costs are heavily skewed (one skeleton can dominate the whole
         # search), so default to dynamic scheduling (chunksize 1); batching
         # only pays off once there are very many units per worker.
-        chunksize = self.chunksize or max(1, len(units) // (n_workers * 64))
-        with ProcessPoolExecutor(
-                max_workers=n_workers,
-                mp_context=mp.get_context(self.start_method)) as ex:
-            return list(ex.map(run_work_unit, units, chunksize=chunksize))
+        chunksize = self.chunksize or max(1, len(units) // (self.workers * 64))
+        try:
+            return list(self._get_executor().map(run_work_unit, units,
+                                                 chunksize=chunksize))
+        except BrokenExecutor:
+            # a dead worker poisons the executor permanently; drop it so the
+            # next run() starts on a fresh pool instead of failing forever
+            self.close()
+            raise
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
 
 
 def make_engine(backend: Optional[str] = None,

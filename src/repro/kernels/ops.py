@@ -12,9 +12,19 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.autotile import tcm_matmul_tiles
+from repro.core.autotile import tcm_matmul_tiles, tcm_model_tiles
 from .flash_attention import flash_attention_pallas
 from .matmul import matmul_pallas
+
+
+def model_blockspec_tiles(cfg, **kw):
+    """All BlockSpec tiles for ``cfg``'s matmuls from one planner call.
+
+    Thin kernel-side alias of ``core.autotile.tcm_model_tiles`` so kernel
+    callers need not import the mapper; ``kw`` forwards mode/batch/seq/
+    vmem_bytes/word_bytes/workers.
+    """
+    return tcm_model_tiles(cfg, **kw)
 
 
 def _interpret_default() -> bool:

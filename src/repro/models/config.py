@@ -4,8 +4,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
-import jax.numpy as jnp
-
 
 @dataclass(frozen=True)
 class ModelConfig:
@@ -60,12 +58,18 @@ class ModelConfig:
     # sub-quadratic long-context support (for the long_500k shape)
     supports_long_context: bool = False
 
+    # jax is imported lazily so config consumers that never build arrays
+    # (e.g. the repro.netmap planner/CLI) stay jax-free and start fast
     @property
     def jdtype(self):
+        import jax.numpy as jnp
+
         return jnp.dtype(self.dtype)
 
     @property
     def jparam_dtype(self):
+        import jax.numpy as jnp
+
         return jnp.dtype(self.param_dtype)
 
     @property

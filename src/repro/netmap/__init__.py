@@ -1,0 +1,29 @@
+"""repro.netmap — whole-network mapping pipeline.
+
+Connects the per-einsum TCM mapper to real model configurations:
+extract a model's per-layer einsums, dedup repeated shapes, batch-search
+the unique set through the parallel search engine, serve repeats from a
+persistent on-disk cache, and compose per-model energy/latency/EDP reports.
+
+    from repro.configs import get_config
+    from repro.core.presets import tpu_v4i_like
+    from repro.netmap import MappingCache, map_network
+
+    report = map_network(get_config("qwen1_5_0_5b"), tpu_v4i_like(),
+                         mode="decode", batch=8, seq=1024,
+                         cache=MappingCache())
+    print(report.render())
+
+CLI: ``python -m repro.netmap --config qwen1_5_0_5b`` (see ``--help``).
+"""
+from .cache import CACHE_VERSION, CacheHit, MappingCache, compute_key
+from .extract import LayerEinsum, extract_einsums
+from .planner import (LayerRow, NetworkReport, UniqueSearch, map_network,
+                      network_blockspec_tiles)
+
+__all__ = [
+    "CACHE_VERSION", "CacheHit", "MappingCache", "compute_key",
+    "LayerEinsum", "extract_einsums",
+    "LayerRow", "NetworkReport", "UniqueSearch", "map_network",
+    "network_blockspec_tiles",
+]

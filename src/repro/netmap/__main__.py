@@ -1,0 +1,95 @@
+"""CLI: map every layer of a model config and print the network EDP report.
+
+  PYTHONPATH=src python -m repro.netmap --config qwen1_5_0_5b
+  PYTHONPATH=src python -m repro.netmap --config qwen1_5_0_5b --fast   # CI
+  PYTHONPATH=src python -m repro.netmap --config phi3_mini_3_8b \
+      --mode prefill --batch 1 --seq 256 --workers 4
+
+The first invocation searches each unique einsum cold and persists the
+optima under ``--cache-dir`` (default ``.tcm_cache/``); later invocations
+with the same (config, arch, shape, objective) are served from the cache in
+milliseconds — the report prints the hit rate and timing either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.configs import ARCHS, get_config
+from repro.core.presets import nvdla_like, tpu_v4i_like, tpu_v5e_like
+from repro.netmap.cache import MappingCache
+from repro.netmap.planner import map_network
+
+ACCEL = {
+    "tpu_v4i": lambda: tpu_v4i_like(),
+    "tpu_v5e": lambda: tpu_v5e_like(),
+    # matmul einsums name their tensors A/B/Z
+    "nvdla": lambda: nvdla_like(tensors=("A", "B", "Z")),
+}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.netmap",
+        description="Whole-network optimal mapping with a persistent cache.")
+    ap.add_argument("--config", required=True,
+                    help=f"model config id (one of: {', '.join(ARCHS)})")
+    ap.add_argument("--accel", choices=sorted(ACCEL), default="tpu_v4i",
+                    help="target accelerator preset (default: tpu_v4i)")
+    ap.add_argument("--mode", choices=("prefill", "decode"), default="decode",
+                    help="serving shape (default: decode)")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="sequences in flight (default: 32)")
+    ap.add_argument("--seq", type=int, default=4096,
+                    help="sequence / KV-cache length (default: 4096)")
+    ap.add_argument("--objective", choices=("edp", "energy", "latency"),
+                    default="edp")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="search-engine worker processes (default: serial)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke-scale config + tiny shapes (CI-friendly)")
+    ap.add_argument("--cache-dir", default=".tcm_cache",
+                    help="persistent mapping-cache directory")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="search everything cold, do not touch the cache")
+    ap.add_argument("--clear-cache", action="store_true",
+                    help="drop the cache before mapping")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the full report as JSON")
+    ap.add_argument("--verbose", action="store_true")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    cfg = get_config(args.config, smoke=args.fast)
+    if args.fast:
+        args.batch, args.seq = min(args.batch, 2), min(args.seq, 128)
+    arch = ACCEL[args.accel]()
+
+    if args.clear_cache:  # honored even with --no-cache
+        MappingCache(root=args.cache_dir).clear()
+    cache = None if args.no_cache else MappingCache(root=args.cache_dir)
+    if cache is not None and cache.n_corrupt:
+        print(f"warning: skipped {cache.n_corrupt} corrupt cache line(s)",
+              file=sys.stderr)
+
+    report = map_network(cfg, arch, objective=args.objective, mode=args.mode,
+                         batch=args.batch, seq=args.seq, cache=cache,
+                         workers=args.workers, verbose=args.verbose)
+    print(report.render())
+    if report.cache_hits and not report.cache_misses:
+        print("  (all mappings served from the persistent cache — "
+              "cold search would have taken "
+              f"{sum(u.t_search for u in report.unique):.3f}s)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_dict(), f, indent=2)
+        print(f"  wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,235 @@
+"""Persistent mapping cache: on-disk memoization of ``tcm_map`` optima.
+
+A JSON-lines store under ``.tcm_cache/`` keyed by a content hash of
+(einsum structure, architecture, objective, pruning flags, cache-format
+version).  Re-mapping a model whose einsums were searched before is then
+O(cache-hit) — the paper's seconds-per-einsum search cost is paid once per
+unique (workload, arch, objective) and served in milliseconds afterwards.
+
+Design points:
+
+  * **Content-addressed keys.** ``compute_key`` hashes the *structural*
+    einsum identity (``search.einsum_key`` — tensors + rank shapes, name
+    ignored), the full ``Arch`` description, the search objective and the
+    pruning flag, plus :data:`CACHE_VERSION`.  Changing any of these yields
+    a different key, so stale entries are never served — bumping
+    ``CACHE_VERSION`` when the cost model changes invalidates the whole
+    store without deleting it.
+  * **Exact round-trips.** Mappings are serialized node-by-node and floats
+    go through JSON's shortest-repr encoding, which round-trips Python
+    floats bit-exactly — a cache hit returns a ``MappingResult`` identical
+    to the cold search's (tested in ``tests/test_netmap_cache.py``).
+  * **Append-only JSON-lines.** Each ``put`` appends one line; loading
+    tolerates corrupt or truncated lines (counted in ``n_corrupt``,
+    skipped) and duplicate keys (last write wins), so a crash mid-append
+    can't poison the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional, Union
+
+from repro.core.arch import Arch
+from repro.core.einsum import Einsum
+from repro.core.looptree import Loop, Mapping, Storage
+from repro.core.search import MapperStats, MappingResult, einsum_key
+
+CACHE_VERSION = 1
+DEFAULT_ROOT = ".tcm_cache"
+
+_STATS_FIELDS = {f.name for f in dataclasses.fields(MapperStats)}
+
+
+# --------------------------------------------------------------------------
+# Wire format (JSON-safe) <-> core dataclasses
+# --------------------------------------------------------------------------
+
+
+def mapping_to_wire(mapping: Mapping) -> list:
+    out = []
+    for n in mapping:
+        if isinstance(n, Storage):
+            out.append(["S", n.level, n.tensor])
+        else:
+            out.append(["L", n.var, n.bound, int(n.spatial), n.fanout, n.dim])
+    return out
+
+
+def mapping_from_wire(wire: list) -> Mapping:
+    nodes = []
+    for rec in wire:
+        if rec[0] == "S":
+            nodes.append(Storage(int(rec[1]), rec[2]))
+        elif rec[0] == "L":
+            nodes.append(Loop(rec[1], int(rec[2]), bool(rec[3]),
+                              int(rec[4]), int(rec[5])))
+        else:
+            raise ValueError(f"unknown mapping node tag {rec[0]!r}")
+    return tuple(nodes)
+
+
+def result_to_wire(result: MappingResult) -> dict:
+    return {
+        "mapping": mapping_to_wire(result.mapping),
+        "energy": result.energy,
+        "latency": result.latency,
+        "edp": result.edp,
+    }
+
+
+def result_from_wire(wire: dict) -> MappingResult:
+    return MappingResult(
+        mapping=mapping_from_wire(wire["mapping"]),
+        energy=wire["energy"],
+        latency=wire["latency"],
+        edp=wire["edp"],
+    )
+
+
+def stats_to_wire(stats: MapperStats) -> dict:
+    return dataclasses.asdict(stats)
+
+
+def stats_from_wire(wire: dict) -> MapperStats:
+    return MapperStats(**{k: v for k, v in wire.items() if k in _STATS_FIELDS})
+
+
+# --------------------------------------------------------------------------
+# Keys
+# --------------------------------------------------------------------------
+
+
+def compute_key(einsum: Einsum, arch: Arch, objective: str,
+                prune_partial: bool = True,
+                version: Optional[int] = None) -> str:
+    """Content hash of everything the search outcome depends on.
+
+    ``Arch`` and its nested levels/fanouts are frozen dataclasses, so their
+    ``repr`` is a complete, deterministic description; the einsum enters via
+    its structural key (name ignored, matching the search-layer memoization).
+    """
+    if version is None:
+        version = CACHE_VERSION
+    payload = repr((einsum_key(einsum), repr(arch), str(objective),
+                    bool(prune_partial), int(version)))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclass
+class CacheHit:
+    """A deserialized cache entry: the optimum plus its search metadata."""
+
+    result: MappingResult
+    stats: MapperStats
+    t_search: float  # wall seconds the original cold search took
+
+
+# --------------------------------------------------------------------------
+# The store
+# --------------------------------------------------------------------------
+
+_REQUIRED = ("v", "key", "mapping", "energy", "latency", "edp")
+
+
+class MappingCache:
+    """On-disk JSON-lines mapping store with hit/miss accounting."""
+
+    def __init__(self, root: Union[str, Path] = DEFAULT_ROOT,
+                 filename: str = "mappings.jsonl"):
+        self.root = Path(root)
+        self.path = self.root / filename
+        self._entries: Dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.n_corrupt = 0
+        self._load()
+
+    # -- persistence -------------------------------------------------------
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        with open(self.path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    if not isinstance(rec, dict) or any(
+                            k not in rec for k in _REQUIRED):
+                        raise ValueError("missing required fields")
+                except (ValueError, TypeError):
+                    self.n_corrupt += 1
+                    continue
+                if rec["v"] != CACHE_VERSION:
+                    continue  # older format: invalidated, not corrupt
+                self._entries[rec["key"]] = rec  # duplicate keys: last wins
+
+    def _append(self, rec: dict) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        with open(self.path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+
+    # -- API ---------------------------------------------------------------
+
+    def get(self, einsum: Einsum, arch: Arch, objective: str,
+            prune_partial: bool = True) -> Optional[CacheHit]:
+        key = compute_key(einsum, arch, objective, prune_partial)
+        rec = self._entries.get(key)
+        if rec is None:
+            self.misses += 1
+            return None
+        try:
+            hit = CacheHit(result=result_from_wire(rec),
+                           stats=stats_from_wire(rec.get("stats", {})),
+                           t_search=float(rec.get("t_search", 0.0)))
+        except (KeyError, IndexError, TypeError, ValueError):
+            # JSON-valid but structurally malformed entry (hand-edited or
+            # bit-rotted): drop it and fall back to a cold search
+            del self._entries[key]
+            self.n_corrupt += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        return hit
+
+    def put(self, einsum: Einsum, arch: Arch, objective: str,
+            result: MappingResult, stats: Optional[MapperStats] = None,
+            t_search: float = 0.0, prune_partial: bool = True) -> str:
+        key = compute_key(einsum, arch, objective, prune_partial)
+        rec = {
+            "v": CACHE_VERSION,
+            "key": key,
+            "einsum": einsum.name,
+            "arch": arch.name,
+            "objective": str(objective),
+            "t_search": float(t_search),
+            "stats": stats_to_wire(stats) if stats is not None else {},
+            **result_to_wire(result),
+        }
+        self._entries[key] = rec
+        self._append(rec)
+        return key
+
+    def clear(self) -> None:
+        """Drop all entries, in memory and on disk."""
+        self._entries.clear()
+        if self.path.exists():
+            self.path.unlink()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries

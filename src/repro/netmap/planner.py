@@ -1,0 +1,322 @@
+"""Network mapping planner: dedup -> batch search -> per-model EDP report.
+
+``map_network`` takes a ``ModelConfig`` + ``Arch`` and produces a
+:class:`NetworkReport`:
+
+  1. **Extract** the per-layer einsum list (``extract.extract_einsums``).
+  2. **Dedup** repeated shapes with the search layer's structural key —
+     a 24-layer dense model collapses to a handful of unique einsums
+     (qwen1.5-0.5b: ~200 layer ops -> 6 unique searches).
+  3. **Search** each unique einsum through the existing ``tcm_map`` driver,
+     sharing one :class:`~repro.core.search.SearchEngine` (so ``--workers``
+     pays its pool start-up once for the whole model), consulting the
+     persistent :class:`~repro.netmap.cache.MappingCache` first.
+  4. **Compose** per-einsum optima into network totals: energy and latency
+     sum over the (sequentially executed) layer ops; the headline network
+     EDP is ``total_energy * total_latency``; mapspace sizes aggregate as
+     the sum of per-unique log10 sizes (the joint space of independent
+     per-einsum choices).
+
+``network_blockspec_tiles`` is the kernel-side hook: one planner call
+returns MXU-aligned Pallas BlockSpec tiles for every matmul of a model
+(used by ``core/autotile.tcm_model_tiles`` and ``kernels/ops.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.arch import Arch
+from repro.core.mapper import tcm_map
+from repro.core.search import (MapperStats, MappingResult, SearchEngine,
+                               einsum_key, make_engine)
+from repro.models.config import ModelConfig
+
+from .cache import MappingCache
+from .extract import LayerEinsum, extract_einsums
+
+
+@dataclass
+class UniqueSearch:
+    """One deduplicated einsum search and where its result came from."""
+
+    op: str  # exemplar operator label (first occurrence)
+    shape: str  # human-readable rank shapes
+    n_uses: int  # how many layer ops this search covers (incl. counts)
+    result: MappingResult
+    stats: MapperStats
+    cached: bool
+    t_search: float
+
+
+@dataclass
+class LayerRow:
+    """One extracted layer op, costed with its unique search's optimum."""
+
+    layer: int
+    op: str
+    count: int
+    energy: float  # pJ, scaled by count
+    latency: float  # s, scaled by count
+    edp: float  # energy * latency of this row
+    cached: bool
+
+
+@dataclass
+class NetworkReport:
+    config: str
+    arch: str
+    mode: str
+    objective: str
+    batch: int
+    seq: int
+    rows: List[LayerRow] = field(default_factory=list)
+    unique: List[UniqueSearch] = field(default_factory=list)
+    total_energy: float = 0.0  # pJ
+    total_latency: float = 0.0  # s
+    total_edp: float = 0.0  # pJ*s = total_energy * total_latency
+    log10_mapspace: float = 0.0  # sum of per-unique log10 |mapspace|
+    # model evaluations behind the composing searches; for cache hits this
+    # is the original cold search's count, not work done by this call
+    n_evaluated: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    t_search: float = 0.0  # seconds spent in cold searches
+    t_total: float = 0.0  # wall seconds of the whole planner call
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def layer_totals(self) -> List[Tuple[int, float, float, float]]:
+        """(layer, energy, latency, edp) summed over each layer's ops."""
+        acc: Dict[int, Tuple[float, float]] = {}
+        for r in self.rows:
+            e, l = acc.get(r.layer, (0.0, 0.0))
+            acc[r.layer] = (e + r.energy, l + r.latency)
+        return [(layer, e, l, e * l)
+                for layer, (e, l) in sorted(acc.items())]
+
+    def to_dict(self) -> dict:
+        return {
+            "config": self.config, "arch": self.arch, "mode": self.mode,
+            "objective": self.objective, "batch": self.batch, "seq": self.seq,
+            "totals": {"energy_pJ": self.total_energy,
+                       "latency_s": self.total_latency,
+                       "edp_pJs": self.total_edp},
+            "layers": [{"layer": r.layer, "op": r.op, "count": r.count,
+                        "energy_pJ": r.energy, "latency_s": r.latency,
+                        "edp_pJs": r.edp, "cached": r.cached}
+                       for r in self.rows],
+            "unique_searches": [
+                {"op": u.op, "shape": u.shape, "n_uses": u.n_uses,
+                 "energy_pJ": u.result.energy, "latency_s": u.result.latency,
+                 "edp_pJs": u.result.edp, "cached": u.cached,
+                 "t_search_s": u.t_search,
+                 "log10_mapspace": u.stats.log10_total}
+                for u in self.unique],
+            "mapspace": {"log10_joint": self.log10_mapspace,
+                         "n_evaluated": self.n_evaluated},
+            "cache": {"hits": self.cache_hits, "misses": self.cache_misses,
+                      "hit_rate": self.cache_hit_rate},
+            "timing": {"t_search_s": self.t_search, "t_total_s": self.t_total},
+        }
+
+    def render(self) -> str:
+        """Human-readable per-layer + totals report."""
+        out = [
+            f"network mapping: {self.config} on {self.arch} "
+            f"[{self.mode}, batch={self.batch}, seq={self.seq}, "
+            f"objective={self.objective}]",
+            "",
+            f"  {len(self.rows)} layer ops -> {len(self.unique)} unique "
+            f"einsum searches (joint mapspace ~10^{self.log10_mapspace:.0f} "
+            f"mappings, {self.n_evaluated} evaluated by the backing "
+            f"searches)",
+            "",
+            "  unique einsums:",
+            f"    {'op':<14} {'shape':<28} {'uses':>4} {'energy(pJ)':>12} "
+            f"{'latency(s)':>12} {'EDP(pJ*s)':>12} {'src':>6}",
+        ]
+        for u in self.unique:
+            out.append(
+                f"    {u.op:<14} {u.shape:<28} {u.n_uses:>4} "
+                f"{u.result.energy:>12.4g} {u.result.latency:>12.4g} "
+                f"{u.result.edp:>12.4g} {'cache' if u.cached else 'search':>6}")
+        out += ["", "  per-layer totals:",
+                f"    {'layer':<7} {'energy(pJ)':>12} {'latency(s)':>12} "
+                f"{'EDP(pJ*s)':>12}"]
+        for layer, e, l, edp in self.layer_totals():
+            label = "head" if layer < 0 else str(layer)
+            out.append(f"    {label:<7} {e:>12.4g} {l:>12.4g} {edp:>12.4g}")
+        out += [
+            "",
+            f"  network totals: energy {self.total_energy:.4g} pJ, "
+            f"latency {self.total_latency:.4g} s, "
+            f"EDP {self.total_edp:.4g} pJ*s",
+            f"  cache: {self.cache_hits} hits / {self.cache_misses} misses "
+            f"(hit rate {100 * self.cache_hit_rate:.0f}%)",
+            f"  time: {self.t_search:.3f}s searching, "
+            f"{self.t_total:.3f}s total",
+        ]
+        return "\n".join(out)
+
+
+def _shape_desc(entry: LayerEinsum) -> str:
+    shapes = entry.einsum.rank_shapes
+    return "x".join(f"{v}={shapes[v]}" for v in sorted(shapes))
+
+
+def map_network(
+    cfg: ModelConfig,
+    arch: Arch,
+    objective: str = "edp",
+    mode: str = "prefill",
+    batch: int = 1,
+    seq: int = 1024,
+    prune_partial: bool = True,
+    cache: Optional[MappingCache] = None,
+    engine: Optional[SearchEngine] = None,
+    workers: Optional[int] = None,
+    verbose: bool = False,
+) -> NetworkReport:
+    """Map every layer of ``cfg`` on ``arch`` and compose the network report.
+
+    ``cache=None`` searches everything cold; pass a
+    :class:`~repro.netmap.cache.MappingCache` to serve repeated shapes from
+    disk.  ``workers``/``engine`` select the search backend exactly as in
+    ``tcm_map`` — one engine is shared across all unique searches.
+    """
+    t0 = time.perf_counter()
+    entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
+    owns_engine = engine is None
+    if owns_engine:
+        engine = make_engine(None, workers)
+    # hit/miss counters are per-cache-instance lifetime totals; snapshot them
+    # so the report shows this call's deltas even on a reused cache object
+    hits0 = cache.hits if cache is not None else 0
+    misses0 = cache.misses if cache is not None else 0
+
+    # dedup: structural einsum key (arch/objective are constant per call)
+    order: List[tuple] = []  # unique keys in first-seen order
+    groups: Dict[tuple, List[LayerEinsum]] = {}
+    for entry in entries:
+        key = einsum_key(entry.einsum)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(entry)
+
+    report = NetworkReport(config=cfg.name, arch=arch.name, mode=mode,
+                           objective=objective, batch=batch, seq=seq)
+    searched: Dict[tuple, UniqueSearch] = {}
+    try:
+        for key in order:
+            members = groups[key]
+            exemplar = members[0]
+            hit = (cache.get(exemplar.einsum, arch, objective, prune_partial)
+                   if cache is not None else None)
+            if hit is not None:
+                result, stats, cached, t_search = (hit.result, hit.stats,
+                                                   True, hit.t_search)
+            else:
+                t1 = time.perf_counter()
+                result, stats = tcm_map(exemplar.einsum, arch,
+                                        objective=objective,
+                                        prune_partial=prune_partial,
+                                        engine=engine)
+                t_search = time.perf_counter() - t1
+                if result is None:
+                    raise RuntimeError(
+                        f"no valid mapping for {exemplar.einsum.name} on "
+                        f"{arch.name}")
+                report.t_search += t_search
+                cached = False
+                if cache is not None:
+                    cache.put(exemplar.einsum, arch, objective, result,
+                              stats, t_search, prune_partial)
+            u = UniqueSearch(op=exemplar.op, shape=_shape_desc(exemplar),
+                             n_uses=sum(m.count for m in members),
+                             result=result, stats=stats, cached=cached,
+                             t_search=t_search)
+            searched[key] = u
+            report.unique.append(u)
+            report.log10_mapspace += stats.log10_total
+            # n_expanded already includes the final evaluations (it counts
+            # every point the curried model was applied to, same as
+            # log10_evaluated)
+            report.n_evaluated += stats.n_expanded
+            if verbose:
+                src = "cache" if cached else f"search {t_search:.2f}s"
+                print(f"  {exemplar.op:<14} {u.shape:<28} [{src}] "
+                      f"edp={result.edp:.4g}")
+    finally:
+        # engines we created are torn down even when a search raises;
+        # caller-provided engines stay open for reuse
+        if owns_engine:
+            engine.close()
+
+    for entry in entries:
+        u = searched[einsum_key(entry.einsum)]
+        energy = u.result.energy * entry.count
+        latency = u.result.latency * entry.count
+        report.rows.append(LayerRow(
+            layer=entry.layer, op=entry.op, count=entry.count,
+            energy=energy, latency=latency, edp=energy * latency,
+            cached=u.cached))
+        report.total_energy += energy
+        report.total_latency += latency
+
+    report.total_edp = report.total_energy * report.total_latency
+    if cache is not None:
+        report.cache_hits = cache.hits - hits0
+        report.cache_misses = cache.misses - misses0
+    else:
+        report.cache_misses = len(report.unique)
+    report.t_total = time.perf_counter() - t0
+    return report
+
+
+# --------------------------------------------------------------------------
+# Kernel hook: whole-model BlockSpec tiles from one planner call
+# --------------------------------------------------------------------------
+
+
+def _mkn(entry: LayerEinsum) -> Optional[Tuple[int, int, int]]:
+    """(M, K, N) of a (possibly batched) matmul entry; None otherwise."""
+    shapes = entry.einsum.rank_shapes
+    if set(shapes) in ({"m", "k", "n"}, {"h", "m", "k", "n"}):
+        return (shapes["m"], shapes["k"], shapes["n"])
+    return None
+
+
+def network_blockspec_tiles(
+    cfg: ModelConfig,
+    mode: str = "prefill",
+    batch: int = 1,
+    seq: int = 1024,
+    vmem_bytes: int = 16 * 2 ** 20,
+    word_bytes: int = 2,
+    workers: Optional[int] = None,
+) -> Dict[str, Tuple[int, int, int]]:
+    """Pallas BlockSpec tiles for every matmul of a model, in one call.
+
+    Returns ``{"L<layer>.<op>": (bm, bk, bn)}`` — batched attention matmuls
+    are tiled per head.  Unique shapes are searched once
+    (``tcm_matmul_tiles`` memoizes), so a 24-layer model costs a handful of
+    block-granular searches.
+    """
+    from repro.core.autotile import tcm_matmul_tiles
+
+    out: Dict[str, Tuple[int, int, int]] = {}
+    for entry in extract_einsums(cfg, mode=mode, batch=batch, seq=seq):
+        dims = _mkn(entry)
+        if dims is None:
+            continue
+        label = ("head" if entry.layer < 0 else f"L{entry.layer}")
+        out[f"{label}.{entry.op}"] = tcm_matmul_tiles(
+            *dims, vmem_bytes=vmem_bytes, word_bytes=word_bytes,
+            workers=workers)
+    return out

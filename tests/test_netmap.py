@@ -1,0 +1,200 @@
+"""Network mapping pipeline: extraction, dedup, planner, CLI, kernel hook."""
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.presets import nvdla_like
+from repro.core.search import einsum_key
+from repro.netmap import MappingCache, extract_einsums, map_network
+from repro.netmap.__main__ import main as netmap_main
+
+ARCH = nvdla_like(tensors=("A", "B", "Z"))  # matmul tensor names
+
+
+# --------------------------------------------------------------------------
+# extraction
+# --------------------------------------------------------------------------
+
+
+def test_extract_qwen_prefill_dedups_to_six():
+    cfg = get_config("qwen1_5_0_5b")
+    entries = extract_einsums(cfg, mode="prefill", batch=1, seq=1024)
+    # 24 layers x (3 qkv + 2 attn + o + 3 ffn) + lm_head
+    assert len(entries) == cfg.n_layers * 9 + 1
+    unique = {einsum_key(e.einsum) for e in entries}
+    # q/k/v/o projections share one shape (q_dim == kv_dim == d_model) and
+    # ffn up/gate share one: proj, qk, av, ffn_up, ffn_down, lm_head
+    assert len(unique) == 6
+
+
+def test_extract_decode_shapes():
+    cfg = get_config("qwen1_5_0_5b")
+    entries = extract_einsums(cfg, mode="decode", batch=4, seq=256)
+    by_op = {e.op: e for e in entries if e.layer == 0}
+    assert by_op["q_proj"].einsum.rank_shapes["m"] == 4  # one token/seq
+    qk = by_op["qk"].einsum.rank_shapes
+    assert qk["m"] == 1 and qk["n"] == 256  # new token vs KV cache
+    assert qk["h"] == 4 * cfg.n_heads
+
+
+def test_extract_ssm_path():
+    cfg = get_config("mamba2_130m")
+    entries = extract_einsums(cfg, mode="prefill", batch=1, seq=512)
+    ops = {e.op for e in entries}
+    assert {"ssm_in_proj", "ssd_qk", "ssd_av", "ssm_out_proj"} <= ops
+    assert "q_proj" not in ops and "ffn_up" not in ops  # d_ff == 0
+
+
+def test_extract_moe_expert_counts():
+    cfg = get_config("phi3_5_moe_42b")
+    entries = extract_einsums(cfg, mode="prefill", batch=1, seq=128)
+    ffn = [e for e in entries if e.op == "ffn_up" and e.layer == 0]
+    assert len(ffn) == 1 and ffn[0].count == cfg.n_experts
+    # per-expert tokens ~ tokens * top_k / n_experts
+    assert ffn[0].einsum.rank_shapes["m"] == 128 * cfg.top_k // cfg.n_experts
+
+
+def test_extract_hybrid_block_pattern():
+    cfg = get_config("recurrentgemma_2b", smoke=True)
+    entries = extract_einsums(cfg, mode="prefill", batch=1, seq=128)
+    by_layer = {}
+    for e in entries:
+        by_layer.setdefault(e.layer, set()).add(e.op)
+    # pattern is (rglru, rglru, wattn)
+    assert "rg_in_proj" in by_layer[0] and "q_proj" not in by_layer[0]
+    assert "q_proj" in by_layer[2] and "rg_in_proj" not in by_layer[2]
+
+
+def test_extract_moe_scarce_tokens_not_overcounted():
+    cfg = get_config("phi3_5_moe_42b")  # 16 experts, top-2
+    entries = extract_einsums(cfg, mode="decode", batch=2, seq=128)
+    ffn = next(e for e in entries if e.op == "ffn_up" and e.layer == 0)
+    # 2 tokens x top-2 = 4 expert-token pairs: only 4 experts see work
+    assert ffn.count == 4 and ffn.einsum.rank_shapes["m"] == 1
+    # indivisible pairs round up, never undercount: 3x2=6 pairs, 16 experts
+    entries = extract_einsums(cfg, mode="decode", batch=3, seq=128)
+    ffn = next(e for e in entries if e.op == "ffn_up" and e.layer == 0)
+    assert ffn.count * ffn.einsum.rank_shapes["m"] >= 6
+
+
+def test_extract_encdec():
+    cfg = get_config("seamless_m4t_medium")
+    prefill = extract_einsums(cfg, mode="prefill", batch=1, seq=64)
+    ops_by_layer = {}
+    for e in prefill:
+        ops_by_layer.setdefault(e.layer, set()).add(e.op)
+    # encoder layers: self-attention only; decoder layers add cross-attn
+    assert "xqk" not in ops_by_layer[0] and "qk" in ops_by_layer[0]
+    dec0 = cfg.enc_layers
+    assert {"qk", "xqk", "xk_proj", "xav"} <= ops_by_layer[dec0]
+    assert max(ops_by_layer) + 1 == cfg.enc_layers + cfg.dec_layers
+
+    decode = extract_einsums(cfg, mode="decode", batch=1, seq=64)
+    dec_ops = {e.op for e in decode}
+    # encoder stack + cross-K/V ran at prefill; not charged per step
+    assert all(e.layer >= dec0 or e.layer == -1 for e in decode)
+    assert "xk_proj" not in dec_ops and "xqk" in dec_ops
+
+
+def test_extract_rejects_bad_args():
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    with pytest.raises(ValueError):
+        extract_einsums(cfg, mode="training")
+    with pytest.raises(ValueError):
+        extract_einsums(cfg, batch=0)
+
+
+# --------------------------------------------------------------------------
+# planner
+# --------------------------------------------------------------------------
+
+
+def _smoke_report(cache=None, **kw):
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    return map_network(cfg, ARCH, mode="decode", batch=2, seq=32,
+                       cache=cache, **kw)
+
+
+def test_map_network_totals_consistent():
+    rep = _smoke_report()
+    assert len(rep.rows) == len(extract_einsums(
+        get_config("qwen1_5_0_5b", smoke=True), mode="decode", batch=2,
+        seq=32))
+    assert len(rep.unique) < len(rep.rows)
+    assert rep.total_energy == pytest.approx(sum(r.energy for r in rep.rows))
+    assert rep.total_latency == pytest.approx(
+        sum(r.latency for r in rep.rows))
+    assert rep.total_edp == rep.total_energy * rep.total_latency
+    assert rep.total_edp > 0 and rep.log10_mapspace > 0
+    # per-layer totals cover every layer plus the LM head (-1)
+    layers = [layer for layer, *_ in rep.layer_totals()]
+    assert layers == sorted(set(r.layer for r in rep.rows))
+
+
+def test_map_network_report_serializes():
+    rep = _smoke_report()
+    d = rep.to_dict()
+    json.dumps(d)  # JSON-safe
+    assert d["totals"]["edp_pJs"] == rep.total_edp
+    text = rep.render()
+    assert "network totals" in text and "hit rate" in text
+
+
+def test_map_network_cache_roundtrip_identical(tmp_path):
+    cold = _smoke_report(cache=MappingCache(root=tmp_path))
+    assert cold.cache_hits == 0
+    assert cold.cache_misses == len(cold.unique)
+
+    warm = _smoke_report(cache=MappingCache(root=tmp_path))  # re-read disk
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == len(warm.unique)
+    assert warm.cache_hit_rate == 1.0
+    # bit-identical composition from cached mappings
+    assert warm.total_energy == cold.total_energy
+    assert warm.total_latency == cold.total_latency
+    assert warm.total_edp == cold.total_edp
+    for u_cold, u_warm in zip(cold.unique, warm.unique):
+        assert u_warm.result == u_cold.result
+        assert u_warm.cached and not u_cold.cached
+
+
+def test_map_network_reused_cache_reports_per_call_deltas(tmp_path):
+    cache = MappingCache(root=tmp_path)
+    cold = _smoke_report(cache=cache)
+    warm = _smoke_report(cache=cache)  # same instance, all hits
+    assert cold.cache_hits == 0 and cold.cache_misses == len(cold.unique)
+    assert warm.cache_hits == len(warm.unique) and warm.cache_misses == 0
+    assert warm.cache_hit_rate == 1.0
+
+
+# --------------------------------------------------------------------------
+# CLI + kernel hook
+# --------------------------------------------------------------------------
+
+
+def test_cli_fast_smoke(tmp_path, capsys):
+    args = ["--config", "qwen1_5_0_5b", "--fast",
+            "--cache-dir", str(tmp_path / "cache"),
+            "--json", str(tmp_path / "report.json")]
+    assert netmap_main(args) == 0
+    out = capsys.readouterr().out
+    assert "network totals" in out and "hit rate 0%" in out
+
+    assert netmap_main(args) == 0  # second run: all cache hits
+    out = capsys.readouterr().out
+    assert "hit rate 100%" in out and "persistent cache" in out
+    report = json.loads((tmp_path / "report.json").read_text())
+    assert report["cache"]["hit_rate"] == 1.0
+
+
+def test_model_blockspec_tiles_hook():
+    from repro.core.autotile import tcm_model_tiles
+
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    tiles = tcm_model_tiles(cfg, mode="decode", batch=2, seq=64)
+    assert "L0.q_proj" in tiles and "head.lm_head" in tiles
+    for (bm, bk, bn) in tiles.values():
+        assert bm >= 1 and bk >= 1 and bn >= 1
+    # attention matmuls are tiled per head: m is the decode token count
+    assert tiles["L0.qk"][0] <= 2

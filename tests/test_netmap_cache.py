@@ -1,0 +1,127 @@
+"""Persistent mapping cache: exact round-trips, invalidation, recovery."""
+import dataclasses
+
+import pytest
+
+from repro.core.einsum import matmul
+from repro.core.mapper import tcm_map
+from repro.core.presets import nvdla_like
+from repro.netmap import cache as cache_mod
+from repro.netmap.cache import MappingCache, compute_key
+
+ARCH = nvdla_like(tensors=("A", "B", "Z"))
+EINSUM = matmul("probe", 8, 16, 4)
+
+
+@pytest.fixture(scope="module")
+def searched():
+    best, stats = tcm_map(EINSUM, ARCH, objective="edp")
+    assert best is not None
+    return best, stats
+
+
+def test_roundtrip_identical_result(tmp_path, searched):
+    best, stats = searched
+    MappingCache(root=tmp_path).put(EINSUM, ARCH, "edp", best, stats,
+                                    t_search=1.25)
+    hit = MappingCache(root=tmp_path).get(EINSUM, ARCH, "edp")  # from disk
+    assert hit is not None
+    # identical MappingResult: same mapping nodes, bit-exact floats
+    assert hit.result == best
+    assert hit.result.mapping == best.mapping
+    assert (hit.result.energy, hit.result.latency, hit.result.edp) == (
+        best.energy, best.latency, best.edp)
+    assert hit.t_search == 1.25
+    # search stats survive too (mapspace accounting for warm reports)
+    assert hit.stats.log10_total == stats.log10_total
+    assert hit.stats.n_final_evals == stats.n_final_evals
+
+
+def test_changed_inputs_invalidate(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+
+    assert cache.get(EINSUM, ARCH, "edp") is not None
+    # different einsum shape
+    assert cache.get(matmul("probe", 16, 16, 4), ARCH, "edp") is None
+    # different objective
+    assert cache.get(EINSUM, ARCH, "latency") is None
+    # different pruning flag
+    assert cache.get(EINSUM, ARCH, "edp", prune_partial=False) is None
+    # different arch (any field change alters the fingerprint)
+    tweaked = dataclasses.replace(ARCH, mac_energy=ARCH.mac_energy * 2)
+    assert cache.get(EINSUM, tweaked, "edp") is None
+    assert cache.hits == 1 and cache.misses == 4
+
+
+def test_einsum_name_is_not_part_of_the_key(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+    renamed = matmul("a-different-name", 8, 16, 4)
+    assert cache.get(renamed, ARCH, "edp") is not None
+
+
+def test_code_version_invalidates(tmp_path, searched, monkeypatch):
+    best, stats = searched
+    MappingCache(root=tmp_path).put(EINSUM, ARCH, "edp", best, stats)
+    monkeypatch.setattr(cache_mod, "CACHE_VERSION", cache_mod.CACHE_VERSION + 1)
+    stale = MappingCache(root=tmp_path)
+    assert len(stale) == 0  # old-version lines ignored, not corrupt
+    assert stale.n_corrupt == 0
+    assert stale.get(EINSUM, ARCH, "edp") is None
+
+
+def test_corrupt_lines_are_skipped(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+    other = matmul("other", 4, 8, 2)
+    best2, stats2 = tcm_map(other, ARCH, objective="edp")
+    cache.put(other, ARCH, "edp", best2, stats2)
+
+    with open(cache.path, "a", encoding="utf-8") as f:
+        f.write("this is not json\n")
+        f.write('{"v": 1, "key": "truncated-entry"}\n')  # missing fields
+        f.write('{"v": 1, "key": "cut off mid-wri')  # crashed append
+
+    recovered = MappingCache(root=tmp_path)
+    assert recovered.n_corrupt == 3
+    assert len(recovered) == 2
+    assert recovered.get(EINSUM, ARCH, "edp").result == best
+    assert recovered.get(other, ARCH, "edp").result == best2
+
+
+def test_structurally_malformed_entry_degrades_to_miss(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    key = cache.put(EINSUM, ARCH, "edp", best, stats)
+    # JSON-valid line with all required keys but a garbage mapping payload
+    rec = dict(cache._entries[key])
+    rec["mapping"] = 5
+    import json
+
+    with open(cache.path, "a", encoding="utf-8") as f:
+        f.write(json.dumps(rec) + "\n")  # last write wins on load
+
+    poisoned = MappingCache(root=tmp_path)
+    assert poisoned.get(EINSUM, ARCH, "edp") is None  # miss, not a crash
+    assert poisoned.n_corrupt == 1 and poisoned.misses == 1
+
+
+def test_clear(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+    cache.clear()
+    assert len(cache) == 0 and not cache.path.exists()
+    assert MappingCache(root=tmp_path).get(EINSUM, ARCH, "edp") is None
+
+
+def test_compute_key_is_stable_and_content_addressed():
+    k1 = compute_key(EINSUM, ARCH, "edp")
+    k2 = compute_key(matmul("renamed", 8, 16, 4), ARCH, "edp")
+    assert k1 == k2  # structural identity, name ignored
+    assert compute_key(EINSUM, ARCH, "energy") != k1
+    assert len(k1) == 64  # sha256 hex
