@@ -1,0 +1,60 @@
+"""CI perf regression gate.
+
+  PYTHONPATH=src python -m benchmarks.run --fast --json BENCH_smoke.json
+  PYTHONPATH=src python benchmarks/check_perf.py BENCH_smoke.json
+
+Compares the perf-smoke record against the committed reference
+(``benchmarks/perf_reference.json``) and exits nonzero when
+
+  * the default ``tcm_map`` QK search wall time regresses more than
+    ``max_time_regression`` (2x) over the committed reference time, or
+  * its serial ``n_expanded`` grows beyond a small tolerance (exploration is
+    deterministic on the serial backend, so a jump means lost prune power —
+    that is the regression wall-time noise cannot excuse).
+
+The committed reference time is deliberately generous (several times a warm
+dev-container run) so the 2x gate trips on algorithmic regressions, not on
+slow CI runners.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REFERENCE = os.path.join(os.path.dirname(__file__), "perf_reference.json")
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        perf = json.load(f)["perf"]
+    with open(REFERENCE) as f:
+        ref = json.load(f)
+
+    failures = []
+    limit_s = ref["qk_search_s"] * ref["max_time_regression"]
+    if perf["qk_search_s"] > limit_s:
+        failures.append(
+            f"QK search took {perf['qk_search_s']}s > {limit_s}s "
+            f"(reference {ref['qk_search_s']}s x "
+            f"{ref['max_time_regression']})")
+    limit_n = ref["qk_n_expanded"] * ref["max_n_expanded_regression"]
+    if perf["qk_n_expanded"] > limit_n:
+        failures.append(
+            f"QK n_expanded {perf['qk_n_expanded']} > {limit_n:.0f} "
+            f"(reference {ref['qk_n_expanded']}) — prune power lost")
+
+    for line in failures:
+        print(f"PERF REGRESSION: {line}")
+    if not failures:
+        print(f"perf ok: QK search {perf['qk_search_s']}s "
+              f"(limit {limit_s}s), n_expanded {perf['qk_n_expanded']} "
+              f"(limit {limit_n:.0f})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -152,6 +152,35 @@ def run(scale: str = "small", workers=None) -> list:
                    f"curry%={rows[1]['phase_curry_pct']};"
                    f"ts%={rows[1]['phase_tileshape_pct']}"), flush=True)
 
+    # global branch-and-bound: shared incumbents (two-phase search, the
+    # default) vs the per-unit-incumbent search, serial backend.  Sound
+    # pruning contract: identical optimum values, strictly less exploration.
+    clear_caches()
+    t0 = time.perf_counter()
+    best_u, s_u = tcm_map(ein, arch, share_incumbents=False)
+    t_unshared = time.perf_counter() - t0
+    clear_caches()
+    t0 = time.perf_counter()
+    best_s, s_s = tcm_map(ein, arch)
+    t_shared = time.perf_counter() - t0
+    assert best_u is not None and best_s is not None
+    assert (best_s.energy, best_s.latency, best_s.edp) == \
+        (best_u.energy, best_u.latency, best_u.edp), \
+        "shared incumbents changed the optimum"
+    assert s_s.n_expanded < s_u.n_expanded, \
+        "shared incumbents did not reduce exploration"
+    rows.append({
+        "bnb_unshared_s": round(t_unshared, 3),
+        "bnb_shared_s": round(t_shared, 3),
+        "bnb_speedup": round(t_unshared / max(t_shared, 1e-9), 2),
+        "n_expanded_unshared": s_u.n_expanded,
+        "n_expanded_shared": s_s.n_expanded,
+        "optimum_edp": best_s.edp,
+    })
+    print(csv_line("fig8/bnb_shared_incumbents", t_shared * 1e6,
+                   f"speedup={rows[-1]['bnb_speedup']}x;"
+                   f"n_exp={s_u.n_expanded}->{s_s.n_expanded}"), flush=True)
+
     # serial vs parallel search-engine speedup on the same workload — only
     # when parallelism was requested (--workers N, N > 1); a 1-worker
     # comparison would be serial-vs-serial.  Caches are cleared before each

@@ -2,12 +2,20 @@
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--scale small|paper] [--only NAME]
-                                          [--workers N]
+                                          [--workers N] [--json PATH] [--fast]
 
 ``--workers N`` (N > 1) runs every TCM search through the process-pool
 search engine; fig8 additionally reports the serial-vs-parallel speedup.
 Prints ``name,us_per_call,derived`` CSV lines and writes a JSON dump to
 ``bench_results.json``.
+
+``--json PATH`` additionally writes a machine-readable perf record —
+per-benchmark wall times, the default QK search's wall time / ``n_expanded``
+/ optimum EDP, and the shared-incumbent speedup ratios — so the repo keeps a
+perf trajectory (``BENCH_<name>.json`` files; see ``benchmarks/check_perf.py``
+for the CI regression gate).  ``--fast`` skips the full benchmark suite and
+runs only the perf smoke (the default ``tcm_map`` QK search plus a cheap
+shared-vs-unshared ratio) — seconds, not minutes; this is what CI runs.
 """
 from __future__ import annotations
 
@@ -15,6 +23,57 @@ import argparse
 import json
 import sys
 import time
+
+
+def perf_smoke() -> dict:
+    """Measure the default QK search + a cheap shared-vs-unshared ratio.
+
+    The QK numbers gate CI (check_perf.py): ``qk_search_s`` against a
+    committed reference wall time, ``qk_n_expanded`` against the committed
+    exploration count — so the QK search always runs on the *serial*
+    backend, where exploration is deterministic (under the process pool
+    ``n_expanded`` depends on worker scheduling and the gate would flake).
+    P0 is small enough to run the unshared search too, giving a CI-cheap
+    bound-propagation speedup ratio.
+    """
+    from repro.core.mapper import tcm_map
+    from repro.core.presets import (nvdla_like, small_matmul_suite,
+                                    tpu_v4i_like)
+    from repro.core.search import clear_caches
+
+    suite = small_matmul_suite()
+    clear_caches()
+    t0 = time.perf_counter()
+    best, stats = tcm_map(suite["QK"], tpu_v4i_like())
+    qk_s = time.perf_counter() - t0
+
+    arch = nvdla_like()
+    clear_caches()
+    t0 = time.perf_counter()
+    best_u, s_u = tcm_map(suite["P0"], arch, share_incumbents=False)
+    p0_unshared_s = time.perf_counter() - t0
+    clear_caches()
+    t0 = time.perf_counter()
+    best_s, s_s = tcm_map(suite["P0"], arch)
+    p0_shared_s = time.perf_counter() - t0
+    assert (best_s.energy, best_s.latency, best_s.edp) == \
+        (best_u.energy, best_u.latency, best_u.edp)
+
+    perf = {
+        "qk_search_s": round(qk_s, 3),
+        "qk_n_expanded": stats.n_expanded,
+        "qk_edp": best.edp,
+        "p0_unshared_s": round(p0_unshared_s, 3),
+        "p0_shared_s": round(p0_shared_s, 3),
+        "p0_bnb_speedup": round(p0_unshared_s / max(p0_shared_s, 1e-9), 2),
+        "p0_n_expanded_unshared": s_u.n_expanded,
+        "p0_n_expanded_shared": s_s.n_expanded,
+    }
+    print(f"# perf-smoke: QK search {qk_s:.2f}s "
+          f"(n_expanded={stats.n_expanded}), "
+          f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x",
+          file=sys.stderr, flush=True)
+    return perf
 
 
 def main() -> None:
@@ -26,7 +85,24 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable perf record (wall times, "
+                    "n_expanded, speedup ratios)")
+    ap.add_argument("--fast", action="store_true",
+                    help="perf smoke only: default QK search + a cheap "
+                    "shared-vs-unshared ratio (what CI runs)")
     args = ap.parse_args()
+
+    record = {"schema": 1, "scale": args.scale, "workers": args.workers,
+              "fast": args.fast, "benchmarks": {}, "perf": {}}
+
+    if args.fast:
+        record["perf"] = perf_smoke()  # gated metrics are serial-only
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"# wrote {args.json}", file=sys.stderr)
+        return
 
     from . import fig6_breakdown, fig7_scaling, fig8_model_speed
     from . import table2_pruning, table3_edp, table4_network_edp
@@ -47,11 +123,32 @@ def main() -> None:
     for name, fn in benches.items():
         t0 = time.perf_counter()
         results[name] = fn(scale=args.scale, workers=args.workers)
-        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr, flush=True)
+        wall = time.perf_counter() - t0
+        record["benchmarks"][name] = {"wall_s": round(wall, 3),
+                                      "rows": results[name]}
+        print(f"# {name} done in {wall:.1f}s", file=sys.stderr, flush=True)
     with open(args.out, "w") as f:
         json.dump({"scale": args.scale, "workers": args.workers,
                    "results": results}, f, indent=2)
+
+    if args.json:
+        # surface fig8's headline ratios at the top level when present —
+        # only at small scale, where they are comparable with the committed
+        # perf_reference.json (paper-scale QK is a different workload)
+        fig8_rows = results.get("fig8") if args.scale == "small" else None
+        for row in (fig8_rows or []):
+            if "bnb_speedup" in row:
+                record["perf"].update({
+                    "qk_search_s": row["bnb_shared_s"],
+                    "qk_n_expanded": row["n_expanded_shared"],
+                    "qk_edp": row["optimum_edp"],
+                    "qk_bnb_speedup": row["bnb_speedup"],
+                })
+            if "speedup_numpy" in row:
+                record["perf"]["curried_model_speedup"] = row["speedup_numpy"]
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -17,32 +17,15 @@ from __future__ import annotations
 
 import math
 import time
-from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 from .arch import Arch
 from .dataflow import count_unpruned_dataflows, make_slots
 from .einsum import Einsum
+from .factor import prime_factorization as _prime_factorization
 from .looptree import Loop, Mapping, validate_structure
 from .search import (MapperStats, MappingResult, SearchEngine, WorkUnit,
                      cached_dataplacements, cached_skeletons, make_engine)
-
-
-@lru_cache(maxsize=None)
-def _prime_factorization(n: int) -> Tuple[Tuple[int, int], ...]:
-    out = []
-    d = 2
-    while d * d <= n:
-        e = 0
-        while n % d == 0:
-            n //= d
-            e += 1
-        if e:
-            out.append((d, e))
-        d += 1
-    if n > 1:
-        out.append((n, 1))
-    return tuple(out)
 
 
 def count_ordered_factorizations(n: int, slots: int) -> float:
@@ -141,6 +124,7 @@ def tcm_map(
     engine: Optional[SearchEngine] = None,
     backend: Optional[str] = None,
     workers: Optional[int] = None,
+    share_incumbents: bool = True,
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Find the optimal mapping of ``einsum`` on ``arch``.
 
@@ -148,7 +132,18 @@ def tcm_map(
     (all three unset) the deterministic serial engine runs everything in this
     process; ``workers=N`` (N > 1) or ``backend="process"`` fans the
     dataplacement x skeleton work units out over a process pool.  Both
-    backends return bit-identical optima and stats.
+    backends return value-identical optima.
+
+    ``share_incumbents`` enables the two-phase global branch-and-bound: a
+    cheap beam dive over every work unit first seeds a shared incumbent, and
+    each finished unit tightens it, so later units prune against the best
+    mapping found *anywhere* rather than only their own dive.  The pruning is
+    sound (only provably-no-better candidates are cut), so the optimum's
+    (energy, latency, edp) values are identical either way;
+    ``share_incumbents=False`` reproduces the per-unit-incumbent search —
+    and, on the serial backend, its exact per-unit statistics — of old.
+    Ignored when a caller-provided ``engine`` is passed (the engine's own
+    setting governs).
     """
     stats = MapperStats()
     t0 = time.perf_counter()
@@ -157,7 +152,8 @@ def tcm_map(
                              collect_sizes, stats)
     owns_engine = engine is None
     if owns_engine:
-        engine = make_engine(backend, workers)
+        engine = make_engine(backend, workers,
+                             share_incumbents=share_incumbents)
     if verbose:
         print(f"dispatching {len(units)} work units "
               f"({stats.n_dataplacements} dataplacements) "

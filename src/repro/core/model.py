@@ -85,6 +85,12 @@ class CurriedModel:
 
         # Compiled evaluators (built lazily).
         self._compiled: Optional[TileShapeOnlyModel] = None
+        # Per-objective exploration steppers (tileshape._Stepper) with their
+        # compiled per-known-set criteria kernels.  Keyed on the objective
+        # string; cached here so every explore/beam-dive over this curried
+        # model — and repeated tcm_map calls hitting the lru-cached model —
+        # reuse one compiled set.  Dropped with the model by clear_caches().
+        self.stepper_cache: Dict[str, object] = {}
 
     @property
     def tile_shape_model(self) -> "TileShapeOnlyModel":

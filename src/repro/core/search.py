@@ -1,18 +1,28 @@
 """Parallel full-mapspace search engine (executor layer).
 
 The TCM driver (``mapper.tcm_map``) materializes the dataplacement x
-dataflow-skeleton cross-product as independent :class:`WorkUnit` records and
-dispatches them through a :class:`SearchEngine`.  Two backends are provided:
+dataflow-skeleton cross-product as :class:`WorkUnit` records and dispatches
+them through a :class:`SearchEngine`.  Engines run a *two-phase global
+branch-and-bound* by default (``share_incumbents=True``): phase 1 beam-dives
+every unit (:func:`run_seed_unit`) to seed one global incumbent objective,
+phase 2 runs the full explorations against it with every finished unit
+tightening the bound — sound pruning, so optima are value-identical to the
+per-unit-incumbent search (``share_incumbents=False``), just found with far
+less exploration.  Two backends are provided:
 
   * :class:`SerialEngine` — runs every unit in the calling process, in unit
-    order.  Deterministic, zero overhead, and the default (tests and small
-    searches use it; it reproduces the historical single-loop behavior
+    order; the incumbent tightens sequentially, so runs are exactly
+    reproducible.  The default (tests and small searches use it; with
+    sharing off it reproduces the historical single-loop behavior
     bit-for-bit).
   * :class:`ProcessPoolEngine` — fans units out over a
     ``concurrent.futures.ProcessPoolExecutor`` with a configurable worker
-    count.  Results come back *in unit order* (``executor.map`` preserves
-    ordering), so the driver's merge — and therefore the selected optimum and
-    every accumulated statistic — is identical to the serial backend.
+    count, publishing the global incumbent through a shared
+    ``multiprocessing.Value`` (lock-free reads once per branch-and-bound
+    step, CAS-style tighten on unit completion).  Results come back *in
+    unit order* (``executor.map`` preserves ordering), so the driver's
+    merge is order-identical to the serial backend; prune counters depend
+    on worker scheduling, the selected optimum's values do not.
 
 Each unit curries the model once (``CurriedModel``), explores tile shapes
 with partial-tile-shape pruning, and returns a picklable
@@ -37,7 +47,7 @@ import time
 from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .arch import Arch
 from .dataflow import enumerate_skeletons
@@ -45,7 +55,7 @@ from .dataplacement import Dataplacement, enumerate_dataplacements
 from .einsum import Einsum
 from .looptree import Mapping
 from .model import CurriedModel
-from .tileshape import explore
+from .tileshape import beam_objective, explore
 
 # --------------------------------------------------------------------------
 # Statistics (moved here from mapper.py so both layers can share them;
@@ -213,12 +223,40 @@ class WorkResult:
     stats: MapperStats
 
 
-def run_work_unit(unit: WorkUnit) -> WorkResult:
+def run_seed_unit(unit: WorkUnit) -> Tuple[int, float, float, float]:
+    """Phase-1 task: beam-dive one unit for an incumbent objective.
+
+    Returns ``(index, objective_upper_bound, curry_seconds, dive_seconds)``
+    — the bound is ``inf`` when the dive finds no complete valid mapping.
+    Currying and diving are timed separately so the engine can book them
+    into the matching ``MapperStats`` phases (phase 2 re-times the curry on
+    a warm cache, so without this the whole curry cost would masquerade as
+    tile-shape time in the fig8 breakdown).  Module-level so the process
+    backend can map it across workers.
+    """
+    if not unit.prune_partial:
+        return (unit.index, float("inf"), 0.0, 0.0)
+    t = time.perf_counter()
+    cm = cached_curried_model(unit.einsum, unit.arch, unit.skeleton)
+    t_curry = time.perf_counter() - t
+    t = time.perf_counter()
+    obj = beam_objective(cm, unit.objective)
+    return (unit.index, obj, t_curry, time.perf_counter() - t)
+
+
+def run_work_unit(unit: WorkUnit,
+                  inc_obj: float = float("inf"),
+                  inc_reader: Optional[Callable[[], float]] = None,
+                  ) -> WorkResult:
     """Curry the model, explore tile shapes, return the unit's optimum.
 
-    Module-level (picklable) so it works under every multiprocessing start
-    method.  Mirrors the historical driver loop exactly: stats of skeletons
-    whose exploration yields no mapping are not accumulated.
+    ``inc_obj``/``inc_reader`` pass an external incumbent bound through to
+    :func:`~repro.core.tileshape.explore` (the two-phase engines' phase-2
+    pruning); with the defaults this is exactly the historical
+    per-unit-incumbent search.  Module-level (picklable) so it works under
+    every multiprocessing start method.  Mirrors the historical driver loop
+    exactly: stats of skeletons whose exploration yields no mapping are not
+    accumulated.
     """
     stats = MapperStats()
     t = time.perf_counter()
@@ -227,7 +265,8 @@ def run_work_unit(unit: WorkUnit) -> WorkResult:
 
     t = time.perf_counter()
     res = explore(cm, objective=unit.objective,
-                  prune_partial=unit.prune_partial)
+                  prune_partial=unit.prune_partial,
+                  inc_obj=inc_obj, inc_reader=inc_reader)
     stats.t_tileshape = time.perf_counter() - t
     if res is None:
         return WorkResult(unit.index, None, stats)
@@ -247,9 +286,20 @@ def run_work_unit(unit: WorkUnit) -> WorkResult:
 
 
 class SearchEngine:
-    """Executes a batch of work units; results must come back in unit order."""
+    """Executes a batch of work units; results must come back in unit order.
+
+    Engines implement the *two-phase global branch-and-bound*
+    (``share_incumbents=True``): phase 1 beam-dives every unit to seed one
+    global incumbent objective, phase 2 runs the full explorations against
+    it, with every finished unit tightening the bound for the units still to
+    come.  Sharing only ever *adds* prune power on top of each unit's own
+    dive, and only cuts candidates provably no better than a real mapping,
+    so the merged optimum's (energy, latency, edp) values are identical with
+    sharing on or off, serial or parallel.
+    """
 
     backend = "abstract"
+    share_incumbents = True
 
     def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
         raise NotImplementedError
@@ -257,14 +307,87 @@ class SearchEngine:
     def close(self) -> None:
         """Release executor resources (worker pools); no-op by default."""
 
+    @staticmethod
+    def _sharing_applies(units: Sequence[WorkUnit]) -> bool:
+        # pruning off => no incumbents at all; a single unit has nothing to
+        # share with (its own dive already seeds its local incumbent)
+        return len(units) > 1 and all(u.prune_partial for u in units)
+
 
 class SerialEngine(SearchEngine):
-    """In-process, in-order execution — deterministic reference backend."""
+    """In-process, in-order execution — deterministic reference backend.
+
+    With ``share_incumbents`` the incumbent tightening is sequential in unit
+    order, so runs are exactly reproducible (no scheduling races).
+    """
 
     backend = "serial"
 
+    def __init__(self, share_incumbents: bool = True):
+        self.share_incumbents = share_incumbents
+
     def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
-        return [run_work_unit(u) for u in units]
+        if not (self.share_incumbents and self._sharing_applies(units)):
+            return [run_work_unit(u) for u in units]
+        inc = float("inf")
+        t_seed: Dict[int, Tuple[float, float]] = {}
+        for u in units:
+            i, obj, t_curry, t_dive = run_seed_unit(u)
+            t_seed[i] = (t_curry, t_dive)
+            inc = min(inc, obj)
+        results = []
+        for u in units:
+            r = run_work_unit(u, inc_obj=inc)
+            t_curry, t_dive = t_seed.get(u.index, (0.0, 0.0))
+            r.stats.t_curry += t_curry
+            r.stats.t_tileshape += t_dive
+            if r.candidate is not None:
+                inc = min(inc, r.candidate.objective(u.objective))
+            results.append(r)
+        return results
+
+
+# Per-worker handle on the engine's shared incumbent (a multiprocessing
+# ``Value('d')``), installed by the pool initializer.  Reads go straight at
+# ``.value`` without taking the lock: a stale read is harmless (the bound
+# only ever tightens, so pruning stays sound), and the load is assumed
+# atomic — true for an aligned 8-byte double on every 64-bit platform this
+# repo targets; a 32-bit host where such loads can tear should read under
+# ``get_lock()`` instead.  Writes are CAS-style under the lock in
+# ``_tighten_shared``.
+_WORKER_INCUMBENT = None
+
+
+def _init_worker(shared) -> None:
+    global _WORKER_INCUMBENT
+    _WORKER_INCUMBENT = shared
+
+
+def _tighten_shared(shared, obj: float) -> None:
+    """Monotonically tighten the shared bound (compare-and-set under lock)."""
+    with shared.get_lock():
+        if obj < shared.value:
+            shared.value = obj
+
+
+def _read_shared() -> float:
+    return _WORKER_INCUMBENT.value
+
+
+def run_work_unit_shared(unit: WorkUnit) -> WorkResult:
+    """Phase-2 worker task: explore against the shared global incumbent.
+
+    The initial bound and the per-B&B-step re-reads come from the shared
+    ``Value``; a finished unit with a complete mapping publishes its
+    objective so in-flight and queued units prune against it.
+    """
+    shared = _WORKER_INCUMBENT
+    if shared is None:  # engine without sharing: plain unit
+        return run_work_unit(unit)
+    r = run_work_unit(unit, inc_obj=shared.value, inc_reader=_read_shared)
+    if r.candidate is not None:
+        _tighten_shared(shared, r.candidate.objective(unit.objective))
+    return r
 
 
 def _default_start_method() -> str:
@@ -298,29 +421,57 @@ class ProcessPoolEngine(SearchEngine):
 
     def __init__(self, workers: Optional[int] = None,
                  chunksize: Optional[int] = None,
-                 start_method: Optional[str] = None):
+                 start_method: Optional[str] = None,
+                 share_incumbents: bool = True):
         self.workers = int(workers) if workers else (os.cpu_count() or 1)
         self.chunksize = chunksize
         self.start_method = start_method or _default_start_method()
+        self.share_incumbents = share_incumbents
         self._executor: Optional[ProcessPoolExecutor] = None
+        self._shared = None  # mp.Value('d'): the published global incumbent
 
     def _get_executor(self) -> ProcessPoolExecutor:
         if self._executor is None:
+            ctx = mp.get_context(self.start_method)
+            # one shared slot for the pool's lifetime; run() re-seeds it per
+            # batch.  ``Value`` handles are picklable as initargs, so this
+            # works under fork, forkserver and spawn alike.
+            self._shared = ctx.Value("d", float("inf"))
             self._executor = ProcessPoolExecutor(
-                max_workers=self.workers,
-                mp_context=mp.get_context(self.start_method))
+                max_workers=self.workers, mp_context=ctx,
+                initializer=_init_worker,
+                initargs=(self._shared if self.share_incumbents else None,))
         return self._executor
 
     def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
         if self.workers <= 1 or len(units) <= 1:
-            return SerialEngine().run(units)
+            return SerialEngine(self.share_incumbents).run(units)
         # Unit costs are heavily skewed (one skeleton can dominate the whole
         # search), so default to dynamic scheduling (chunksize 1); batching
         # only pays off once there are very many units per worker.
         chunksize = self.chunksize or max(1, len(units) // (self.workers * 64))
         try:
-            return list(self._get_executor().map(run_work_unit, units,
-                                                 chunksize=chunksize))
+            executor = self._get_executor()
+            if not (self.share_incumbents and self._sharing_applies(units)):
+                return list(executor.map(run_work_unit, units,
+                                         chunksize=chunksize))
+            # phase 1: beam-dive every unit, seed the shared incumbent.
+            # Memoization is per-process, so a phase-2 unit landing on a
+            # different worker re-curries and re-dives — the pool trades
+            # aggregate CPU seconds for wall time here.
+            seeds = list(executor.map(run_seed_unit, units,
+                                      chunksize=chunksize))
+            with self._shared.get_lock():
+                self._shared.value = min(
+                    (s[1] for s in seeds), default=float("inf"))
+            # phase 2: full explorations against the improving global bound
+            results = list(executor.map(run_work_unit_shared, units,
+                                        chunksize=chunksize))
+            # seeds/results both follow the units sequence order
+            for r, (_, _, t_curry, t_dive) in zip(results, seeds):
+                r.stats.t_curry += t_curry
+                r.stats.t_tileshape += t_dive
+            return results
         except BrokenExecutor:
             # a dead worker poisons the executor permanently; drop it so the
             # next run() starts on a fresh pool instead of failing forever
@@ -331,20 +482,25 @@ class ProcessPoolEngine(SearchEngine):
         if self._executor is not None:
             self._executor.shutdown()
             self._executor = None
+            self._shared = None
 
 
 def make_engine(backend: Optional[str] = None,
-                workers: Optional[int] = None) -> SearchEngine:
+                workers: Optional[int] = None,
+                share_incumbents: bool = True) -> SearchEngine:
     """Resolve a backend name + worker count to an engine.
 
     ``backend=None`` auto-selects: the process pool iff ``workers`` asks for
     more than one worker, else the deterministic serial engine (the default
     used by the test suite and by ``tcm_map`` with no arguments).
+    ``share_incumbents=False`` disables cross-unit bound propagation,
+    reproducing the per-unit-incumbent search exactly.
     """
     if backend is None:
         backend = "process" if workers and workers > 1 else "serial"
     if backend == "serial":
-        return SerialEngine()
+        return SerialEngine(share_incumbents=share_incumbents)
     if backend == "process":
-        return ProcessPoolEngine(workers=workers)
+        return ProcessPoolEngine(workers=workers,
+                                 share_incumbents=share_incumbents)
     raise ValueError(f"unknown search backend {backend!r}")

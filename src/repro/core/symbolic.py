@@ -297,6 +297,64 @@ def eval_criteria(crits: Sequence[Criterion], index: Mapping[str, int],
     return out
 
 
+class CriteriaKernel:
+    """Compile a criteria list into packed numpy form, evaluated per batch.
+
+    ``eval_criteria`` re-resolves symbols and recomputes every
+    ``column ** exponent`` power at each occurrence of each term, every
+    batch.  A kernel resolves the symbol indices once at build time and
+    evaluates each distinct ``(column, exponent)`` *factor* exactly once per
+    batch (``**`` is by far the most expensive elementwise op here); terms
+    then multiply precomputed contiguous factor vectors.  Products and sums
+    run left-to-right in the same order as the interpreted loops, so kernel
+    results are bit-identical to ``eval_criteria`` — pruning decisions
+    compiled through a kernel cannot diverge from the reference path.
+    """
+
+    __slots__ = ("n_crits", "_factors", "_terms_by_crit")
+
+    def __init__(self, crits: Sequence[Criterion], index: Mapping[str, int]):
+        self.n_crits = len(crits)
+        factor_id: Dict[Tuple[int, int], int] = {}
+        factors: list = []  # (column, exponent)
+        terms_by_crit: list = []
+        for crit in crits:
+            terms = []
+            for coeff, powers in crit:
+                fids = []
+                for s, e in powers:
+                    key = (index[s], e)
+                    fid = factor_id.setdefault(key, len(factors))
+                    if fid == len(factors):
+                        factors.append(key)
+                    fids.append(fid)
+                terms.append((coeff, tuple(fids)))
+            terms_by_crit.append(tuple(terms))
+        self._factors = tuple(factors)
+        self._terms_by_crit = tuple(terms_by_crit)
+
+    def __call__(self, cols: np.ndarray) -> np.ndarray:
+        """cols: float array (n_candidates, n_syms) -> (n_candidates, n_crits)."""
+        n = cols.shape[0]
+        out = np.empty((n, self.n_crits))
+        if self.n_crits == 0:
+            return out
+        F = [cols[:, ci] if e == 1 else cols[:, ci] ** e
+             for ci, e in self._factors]
+        for j, terms in enumerate(self._terms_by_crit):
+            acc = np.zeros(n)
+            for coeff, fids in terms:
+                if fids:
+                    t = coeff * F[fids[0]]
+                    for fi in fids[1:]:
+                        t = t * F[fi]
+                else:
+                    t = np.full(n, coeff)
+                acc += t
+            out[:, j] = acc
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Vectorized compiled evaluation: Poly/MaxExpr -> f(array_env) -> array
 # ---------------------------------------------------------------------------

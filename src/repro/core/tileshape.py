@@ -22,12 +22,14 @@ regardless of future tile shape choices" (§IV-C):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .factor import divisors
 from .model import CurriedModel, LoopSite
-from .symbolic import Criterion, Poly, eval_criteria, expr_polys, grouped_criteria
+from .symbolic import (Criterion, CriteriaKernel, Poly, expr_polys,
+                       grouped_criteria)
 
 
 @dataclass
@@ -50,11 +52,11 @@ class ExploreResult:
 
 
 PARETO_EXACT_N = 2048
+_UNSET = object()  # sentinel: _Stepper's beam dive not computed yet
 
 
 def _divisors(n: int) -> np.ndarray:
-    out = [d for d in range(1, n + 1) if n % d == 0]
-    return np.array(out, dtype=np.int64)
+    return divisors(n)  # prime-power expansion, lru-cached (factor.py)
 
 
 def _objective(energy: np.ndarray, latency: np.ndarray, kind: str):
@@ -103,7 +105,17 @@ def _pareto_keep_exact(C: np.ndarray, block: int = 128) -> np.ndarray:
 
     A dominator has column-wise <= values hence <= sum, so rows in a chunk
     can only be dominated by kept rows from earlier chunks or by
-    earlier/equal rows within the chunk (ties resolve to first occurrence)."""
+    earlier/equal rows within the chunk (ties resolve to first occurrence).
+
+    Within a chunk, row ``j`` is removed iff some row earlier in the
+    (criteria-sum, original-position) order weakly dominates it — checking
+    *any* earlier dominator (one vectorized triangular test) rather than
+    only not-yet-removed ones is equivalent, because a removed dominator's
+    own remover precedes and dominates ``j`` too (the (sum, position) order
+    is total and weak dominance is transitive), so every removal chain ends
+    at a kept row.  The removal set is therefore also independent of the
+    chunking itself; ``block`` only balances the pairwise tensor size
+    against how early the kept-set shrinks."""
     n = C.shape[0]
     if n <= 1:
         return np.ones(n, dtype=bool)
@@ -120,21 +132,75 @@ def _pareto_keep_exact(C: np.ndarray, block: int = 128) -> np.ndarray:
             dom = (kept[:k, None, :] <= blk[None, :, :]).all(-1).any(0)
         else:
             dom = np.zeros(b, dtype=bool)
-        # within-chunk: j dominated by earlier i in the same chunk
+        # within-chunk: j dominated by an earlier (position order == sorted
+        # (sum, original-position) order, argsort being stable) row i
         m = (blk[:, None, :] <= blk[None, :, :]).all(-1)
-        for j in range(b):
-            if dom[j]:
-                continue
-            if m[:j, j][~dom[:j]].any() if j else False:
-                dom[j] = True
+        dom |= np.triu(m, 1).any(axis=0)
         surv = np.where(~dom)[0]
-        for j in surv:
-            kept[k] = blk[j]
-            k += 1
-            keep_pos.append(start + j)
+        take = blk[surv]
+        kept[k:k + len(surv)] = take
+        k += len(surv)
+        keep_pos.extend((start + surv).tolist())
     mask = np.zeros(n, dtype=bool)
     mask[order[np.array(keep_pos, dtype=np.int64)]] = True
     return mask
+
+
+GROUP_BATCH_MAX = 192  # largest group handled by the batched pairwise path
+_PAIRWISE_BUDGET = 1 << 24  # bool elements per batched dominance tensor
+
+
+def _grouped_pareto(C: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Per-group non-dominated mask; groups are rows of ``keys`` that compare
+    equal (candidates with different remaining quotients / fanout capacity
+    cannot dominate each other).
+
+    Groups are found with one stable lexsort + boundary scan, then all groups
+    of the same size are filtered through a single vectorized pairwise
+    dominance pass (padding-free because sizes match), so the common case —
+    thousands of small groups per step — costs a handful of numpy ops instead
+    of a Python-level ``_pareto_keep`` call per group.  Oversized groups fall
+    back to ``_pareto_keep``; results are bit-identical to the per-group
+    loop: a row is removed iff a weak dominator precedes it in
+    ``_pareto_keep_exact``'s (criteria-sum, original-position) order — the
+    chain of removals always ends at a kept dominator, so checking *any*
+    preceding dominator is equivalent to the reference scan's kept-only
+    check, floating-point sum ties and all.
+    """
+    n = C.shape[0]
+    keep = np.ones(n, dtype=bool)
+    if n <= 1:
+        return keep
+    order = np.lexsort(keys.T)  # stable: ties preserve candidate order
+    sk = keys[order]
+    starts = np.flatnonzero(
+        np.concatenate([[True], (sk[1:] != sk[:-1]).any(axis=1)]))
+    sizes = np.diff(np.append(starts, n))
+    for s in np.unique(sizes):
+        if s < 2:
+            continue
+        gs = starts[sizes == s]
+        if s > GROUP_BATCH_MAX:
+            for st0 in gs:
+                gi = order[st0:st0 + s]
+                keep[gi] = _pareto_keep(C[gi])
+            continue
+        idx = order[gs[:, None] + np.arange(s)[None, :]]  # (n_groups, s)
+        tri = np.triu(np.ones((s, s), dtype=bool), 1)  # [i, j]: i < j
+        chunk = max(1, _PAIRWISE_BUDGET // int(s * s * C.shape[1]))
+        for c0 in range(0, idx.shape[0], chunk):
+            ii = idx[c0:c0 + chunk]
+            X = C[ii]  # (g, s, K)
+            le = (X[:, :, None, :] <= X[:, None, :, :]).all(-1)  # i dom j
+            # the reference scan's order: ascending criteria sum, stable —
+            # i precedes j iff sum_i < sum_j, or the (floating-point) sums
+            # tie and i comes first in frontier order
+            sums = X.sum(axis=-1)
+            earlier = (sums[:, :, None] < sums[:, None, :]) \
+                | ((sums[:, :, None] == sums[:, None, :]) & tri[None])
+            dominated = (le & earlier).any(axis=1)
+            keep[ii] = ~dominated
+    return keep
 
 
 def _lb_terms(poly: Poly, known: frozenset,
@@ -170,7 +236,26 @@ def _lb_terms(poly: Poly, known: frozenset,
 
 
 class _Stepper:
-    """Shared expansion machinery over the site exploration order."""
+    """Shared expansion machinery over the site exploration order.
+
+    Criteria and lower-bound polynomials depend only on the set of already
+    assigned symbols, and the exploration order is fixed — so there are
+    exactly ``len(explore_order)`` distinct known-sets per curried model.
+    All criteria are therefore lowered once per known-set into packed
+    :class:`~repro.core.symbolic.CriteriaKernel` form and memoized
+    (``_dom_kernels`` / ``_lb_kernels``), instead of being re-derived and
+    interpreted through Python loops at every step of every explore call.
+    Steppers themselves are memoized per (curried model, objective) via
+    :meth:`get`, so a beam dive and a full explore share one compiled set.
+    """
+
+    @classmethod
+    def get(cls, cm: CurriedModel, objective: str) -> "_Stepper":
+        cache = cm.stepper_cache
+        st = cache.get(objective)
+        if st is None:
+            st = cache[objective] = cls(cm, objective)
+        return st
 
     def __init__(self, cm: CurriedModel, objective: str):
         self.cm = cm
@@ -222,6 +307,55 @@ class _Stepper:
             for p, cap in zip(self.usage_polys, self.usage_caps)
             if cap != float("inf")
         ]
+        # compile-once layer: usage criteria are known-set independent
+        self.usage_kernels = [
+            (CriteriaKernel(crit, self.sym_index), cap)
+            for crit, cap in self.usage_crits if crit
+        ]
+        # per-known-set compiled kernels, filled lazily along explore_order
+        self._dom_kernels: Dict[frozenset, Optional[CriteriaKernel]] = {}
+        self._lb_kernels: Dict[
+            frozenset, Tuple[CriteriaKernel, CriteriaKernel]] = {}
+        # memoized beam-dive result (deterministic).  The two-phase engines
+        # dive every unit in phase 1 before exploring it in phase 2; this
+        # memo dedupes the two dives whenever both run in one process (the
+        # serial engine always; pool workers only when scheduling lands a
+        # unit's phases on the same worker, since memos are per-process).
+        self._beam: object = _UNSET
+
+    def beam_incumbent(self):
+        if self._beam is _UNSET:
+            self._beam = _beam_incumbent(self)
+        return self._beam
+
+    def dominance_kernel(self, known: frozenset) -> Optional[CriteriaKernel]:
+        """Compiled dominance criteria for one known-set (None if empty)."""
+        if known not in self._dom_kernels:
+            crits = grouped_criteria(
+                self.objective_polys + self.usage_polys, known)
+            self._dom_kernels[known] = (
+                CriteriaKernel(crits, self.sym_index) if crits else None)
+        return self._dom_kernels[known]
+
+    def lb_kernels(self, known: frozenset
+                   ) -> Tuple[CriteriaKernel, CriteriaKernel]:
+        """Compiled (energy, latency-arms) lower-bound kernels for one
+        known-set, over columns extended with the ``rem:`` pseudo-symbols."""
+        if known not in self._lb_kernels:
+            unassigned_by_var: Dict[str, List[str]] = {
+                v: [] for v in self.vars_list}
+            for s in self.sites:
+                if s.sym not in known:
+                    unassigned_by_var[s.var].append(s.sym)
+            e_crit = _lb_terms(self.cm.energy, known, self.var_of_sym,
+                               unassigned_by_var)
+            arm_crits = [
+                _lb_terms(a, known, self.var_of_sym, unassigned_by_var)
+                for a in self.latency_arms]
+            self._lb_kernels[known] = (
+                CriteriaKernel([e_crit], self.ext_index),
+                CriteriaKernel(arm_crits, self.ext_index))
+        return self._lb_kernels[known]
 
     def init_state(self):
         n_sites = len(self.sites)
@@ -272,40 +406,42 @@ class _Stepper:
 
     def usage_lower_ok(self, cols, assigned_set) -> np.ndarray:
         """Monotone lower-bound validity mask."""
-        if not self.usage_crits:
+        if not self.usage_kernels:
             return np.ones(cols.shape[0], dtype=bool)
-        lower = cols.astype(np.float64).copy()
+        lower = cols.astype(np.float64)
         unassigned = [i for i in range(len(self.sites))
                       if i not in assigned_set]
         if unassigned:
             lower[:, unassigned] = 1.0
         ok = np.ones(cols.shape[0], dtype=bool)
-        for crit, cap in self.usage_crits:
-            vals = eval_criteria(crit, self.sym_index, lower)
-            if vals.shape[1]:
-                ok &= vals[:, 0] <= cap
+        for kernel, cap in self.usage_kernels:
+            ok &= kernel(lower)[:, 0] <= cap
         return ok
 
     def objective_lower_bound(self, cols, rem, known: frozenset) -> np.ndarray:
         """Sound lower bound of the objective for each partial candidate."""
         ext = np.concatenate(
             [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
-        unassigned_by_var: Dict[str, List[str]] = {v: [] for v in self.vars_list}
-        for s in self.sites:
-            if s.sym not in known:
-                unassigned_by_var[s.var].append(s.sym)
-        e_crit = _lb_terms(self.cm.energy, known, self.var_of_sym,
-                           unassigned_by_var)
-        e_lb = eval_criteria([e_crit], self.ext_index, ext)[:, 0]
-        arm_crits = [_lb_terms(a, known, self.var_of_sym, unassigned_by_var)
-                     for a in self.latency_arms]
-        arms = eval_criteria(arm_crits, self.ext_index, ext)
-        l_lb = arms.max(axis=1)
+        e_kernel, arm_kernel = self.lb_kernels(known)
+        e_lb = e_kernel(ext)[:, 0]
+        l_lb = arm_kernel(ext).max(axis=1)
         if self.objective == "edp":
             return e_lb * l_lb
         if self.objective == "energy":
             return e_lb
         return l_lb
+
+
+def beam_objective(cm: CurriedModel, objective: str = "edp") -> float:
+    """Objective of the cheap beam-dive mapping (``inf`` when the dive finds
+    none).  This is the phase-1 primitive of the two-phase search: every work
+    unit is dived first, and the best dive seeds the global incumbent that
+    phase-2 full explorations prune against.  Sound as an upper bound — the
+    dive only returns objectives of complete, validity-checked mappings."""
+    if not cm.sites:
+        return float("inf")
+    res = _Stepper.get(cm, objective).beam_incumbent()
+    return float("inf") if res is None else res[3]
 
 
 def _beam_incumbent(st: _Stepper, width: int = 64):
@@ -341,14 +477,31 @@ def _beam_incumbent(st: _Stepper, width: int = 64):
 
 def explore(cm: CurriedModel, objective: str = "edp",
             prune_partial: bool = True,
-            debug: bool = False) -> Optional[ExploreResult]:
+            debug: bool = False,
+            inc_obj: float = float("inf"),
+            inc_reader: Optional[Callable[[], float]] = None,
+            ) -> Optional[ExploreResult]:
+    """Full exploration of one curried model's tile shapes.
+
+    ``inc_obj`` is an *external* upper bound on the objective (the best
+    complete mapping already known elsewhere — e.g. another work unit's
+    optimum); ``inc_reader``, when given, is re-read once per branch-and-bound
+    step so an improving global bound published by concurrent workers
+    tightens in-flight searches.  Both are sound: candidates are discarded
+    only when their objective lower bound already meets or exceeds the value
+    of a real, complete mapping, so the *returned optimum's value* is
+    unchanged — a unit whose entire subtree is cut returns its local beam
+    incumbent (or None), and the caller's merge keeps the external bound's
+    unit as the winner.
+    """
     stats = ExploreStats()
     if not cm.sites:
         return None
-    st = _Stepper(cm, objective)
+    st = _Stepper.get(cm, objective)
 
-    incumbent = _beam_incumbent(st) if prune_partial else None
-    inc_obj = incumbent[3] if incumbent is not None else np.inf
+    incumbent = st.beam_incumbent() if prune_partial else None
+    local_obj = incumbent[3] if incumbent is not None else np.inf
+    bound = min(local_obj, inc_obj) if prune_partial else np.inf
 
     cols, rem, fan_rem = st.init_state()
     assigned: List[int] = []
@@ -373,9 +526,11 @@ def explore(cm: CurriedModel, objective: str = "edp",
             cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
 
         # ---- branch-and-bound prune vs incumbent --------------------------
-        if prune_partial and not last_step and np.isfinite(inc_obj):
+        if prune_partial and inc_reader is not None:
+            bound = min(bound, inc_reader())
+        if prune_partial and not last_step and np.isfinite(bound):
             lb = st.objective_lower_bound(cols, rem, known)
-            ok = lb < inc_obj
+            ok = lb < bound
             stats.n_pruned_bound += int((~ok).sum())
             if not ok.any():
                 return _finish(None, incumbent, stats)
@@ -383,18 +538,11 @@ def explore(cm: CurriedModel, objective: str = "edp",
 
         # ---- dominance prune over criteria --------------------------------
         if prune_partial and not last_step and cols.shape[0] > 1:
-            crits = grouped_criteria(
-                st.objective_polys + st.usage_polys, known)
-            if crits:
-                C = eval_criteria(crits, st.sym_index,
-                                  cols.astype(np.float64))
+            kernel = st.dominance_kernel(known)
+            if kernel is not None:
+                C = kernel(cols.astype(np.float64))
                 keys = np.concatenate([rem, fan_rem], axis=1)
-                _, inv = np.unique(keys, axis=0, return_inverse=True)
-                keep = np.ones(cols.shape[0], dtype=bool)
-                for g in range(inv.max() + 1):
-                    gi = np.where(inv == g)[0]
-                    if len(gi) > 1:
-                        keep[gi] = _pareto_keep(C[gi])
+                keep = _grouped_pareto(C, keys)
                 stats.n_pruned_dominated += int((~keep).sum())
                 cols, rem, fan_rem = cols[keep], rem[keep], fan_rem[keep]
         stats.max_frontier = max(stats.max_frontier, cols.shape[0])

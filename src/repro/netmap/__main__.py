@@ -48,6 +48,9 @@ def build_parser() -> argparse.ArgumentParser:
                     default="edp")
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
+    ap.add_argument("--no-share-incumbents", action="store_true",
+                    help="disable cross-unit bound propagation (slower, "
+                    "value-identical optima; for benchmarking)")
     ap.add_argument("--fast", action="store_true",
                     help="smoke-scale config + tiny shapes (CI-friendly)")
     ap.add_argument("--cache-dir", default=".tcm_cache",
@@ -78,7 +81,9 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     report = map_network(cfg, arch, objective=args.objective, mode=args.mode,
                          batch=args.batch, seq=args.seq, cache=cache,
-                         workers=args.workers, verbose=args.verbose)
+                         workers=args.workers,
+                         share_incumbents=not args.no_share_incumbents,
+                         verbose=args.verbose)
     print(report.render())
     if report.cache_hits and not report.cache_misses:
         print("  (all mappings served from the persistent cache — "

@@ -39,7 +39,11 @@ from repro.core.einsum import Einsum
 from repro.core.looptree import Loop, Mapping, Storage
 from repro.core.search import MapperStats, MappingResult, einsum_key
 
-CACHE_VERSION = 1
+# v2: two-phase shared-incumbent search — optimum *values* are unchanged,
+# but a value-tied optimal mapping can be tie-broken differently than the
+# per-unit search, so pre-existing entries are invalidated wholesale to keep
+# the "a hit is identical to a cold search" guarantee honest.
+CACHE_VERSION = 2
 DEFAULT_ROOT = ".tcm_cache"
 
 _STATS_FIELDS = {f.name for f in dataclasses.fields(MapperStats)}

@@ -180,6 +180,7 @@ def map_network(
     cache: Optional[MappingCache] = None,
     engine: Optional[SearchEngine] = None,
     workers: Optional[int] = None,
+    share_incumbents: bool = True,
     verbose: bool = False,
 ) -> NetworkReport:
     """Map every layer of ``cfg`` on ``arch`` and compose the network report.
@@ -187,13 +188,17 @@ def map_network(
     ``cache=None`` searches everything cold; pass a
     :class:`~repro.netmap.cache.MappingCache` to serve repeated shapes from
     disk.  ``workers``/``engine`` select the search backend exactly as in
-    ``tcm_map`` — one engine is shared across all unique searches.
+    ``tcm_map`` — one engine is shared across all unique searches, so every
+    per-einsum search inherits the engine's two-phase shared-incumbent
+    branch-and-bound (``share_incumbents=False`` opts back out; optima are
+    value-identical either way, it only changes search time).
     """
     t0 = time.perf_counter()
     entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
     owns_engine = engine is None
     if owns_engine:
-        engine = make_engine(None, workers)
+        engine = make_engine(None, workers,
+                             share_incumbents=share_incumbents)
     # hit/miss counters are per-cache-instance lifetime totals; snapshot them
     # so the report shows this call's deltas even on a reused cache object
     hits0 = cache.hits if cache is not None else 0

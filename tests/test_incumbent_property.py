@@ -1,0 +1,54 @@
+"""Randomized incumbent-soundness property (hypothesis, optional).
+
+Skips cleanly when ``hypothesis`` is not installed; the deterministic
+incumbent-sharing tests live in ``test_incumbent_sharing.py`` and always
+run.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: pip install hypothesis "
+           "(see requirements.txt)")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.einsum import matmul  # noqa: E402
+from repro.core.mapper import tcm_map  # noqa: E402
+from repro.core.tileshape import explore  # noqa: E402
+
+from test_incumbent_sharing import _small_arch, _unit_models  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    m=st.sampled_from([2, 3, 4]),
+    k=st.sampled_from([2, 4]),
+    n=st.sampled_from([2, 3]),
+    cap=st.sampled_from([4, 8, 16]),
+    slack=st.sampled_from([1e-12, 1e-6, 0.1, 10.0]),
+)
+def test_property_explore_incumbent_soundness(m, k, n, cap, slack):
+    """Any external bound strictly above the optimum (deliberately tight)
+    returns the same optimum values as an infinitely loose one, for every
+    work unit of a random workload; and the full shared-incumbent search
+    matches the unshared one."""
+    ein = matmul("mm", m, k, n)
+    arch = _small_arch(cap)
+    for cm in _unit_models(ein, arch):
+        base = explore(cm, objective="edp")
+        if base is None:
+            continue
+        tight = explore(cm, objective="edp",
+                        inc_obj=base.edp * (1 + slack))
+        assert tight is not None
+        assert (tight.energy, tight.latency, tight.edp) == \
+            (base.energy, base.latency, base.edp)
+    best_u, _ = tcm_map(ein, arch, share_incumbents=False)
+    best_s, _ = tcm_map(ein, arch)
+    assert (best_s is None) == (best_u is None)
+    if best_s is not None:
+        assert (best_s.energy, best_s.latency, best_s.edp) == \
+            (best_u.energy, best_u.latency, best_u.edp)

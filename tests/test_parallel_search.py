@@ -1,8 +1,15 @@
 """Parallel search engine: parity with the serial backend + executor units.
 
-The acceptance bar is bit-identical results: the process-pool backend must
-return the same optimal mapping (same EDP/energy/latency, same LoopTree) and
-the same merged mapspace-size stats as the deterministic serial backend.
+Two parity contracts:
+
+  * ``share_incumbents=False`` (the historical per-unit-incumbent search) is
+    bit-identical across backends: same optimal mapping (same
+    EDP/energy/latency, same LoopTree) and the same merged stats.
+  * The default shared-incumbent search returns *value-identical* optima
+    (energy, latency, edp) across backends and vs the unshared search; its
+    prune counters depend on incumbent arrival order, which is deterministic
+    serially but scheduling-dependent in the process pool, so only
+    driver-side enumeration stats are compared there.
 """
 import pickle
 
@@ -39,10 +46,17 @@ STAT_FIELDS = (
 )
 
 
+DRIVER_STAT_FIELDS = (
+    "log10_total", "log10_after_df_pruning", "log10_after_loop_pruning",
+    "n_dataplacements", "n_skeletons",
+)
+
+
 @pytest.mark.parametrize("name,ein,arch", CASES, ids=[c[0] for c in CASES])
-def test_parallel_matches_serial(name, ein, arch):
-    best_s, st_s = tcm_map(ein, arch)
-    best_p, st_p = tcm_map(ein, arch, workers=2)
+def test_parallel_matches_serial_unshared(name, ein, arch):
+    """The non-shared search stays bit-identical across backends."""
+    best_s, st_s = tcm_map(ein, arch, share_incumbents=False)
+    best_p, st_p = tcm_map(ein, arch, workers=2, share_incumbents=False)
     assert best_s is not None and best_p is not None
     # bit-identical optimum
     assert best_p.edp == best_s.edp
@@ -54,13 +68,32 @@ def test_parallel_matches_serial(name, ein, arch):
         assert getattr(st_p, f) == getattr(st_s, f), f
 
 
+@pytest.mark.parametrize("name,ein,arch", CASES, ids=[c[0] for c in CASES])
+def test_parallel_matches_serial(name, ein, arch):
+    """The default shared-incumbent search is value-identical across
+    backends (prune counters may differ with worker scheduling)."""
+    best_s, st_s = tcm_map(ein, arch)
+    best_p, st_p = tcm_map(ein, arch, workers=2)
+    assert best_s is not None and best_p is not None
+    assert best_p.edp == best_s.edp
+    assert best_p.energy == best_s.energy
+    assert best_p.latency == best_s.latency
+    for f in DRIVER_STAT_FIELDS:
+        assert getattr(st_p, f) == getattr(st_s, f), f
+
+
 def test_parallel_matches_serial_other_objectives():
     _, ein, arch = CASES[0]
     for objective in ("energy", "latency"):
         best_s, _ = tcm_map(ein, arch, objective=objective)
         best_p, _ = tcm_map(ein, arch, objective=objective, workers=2)
         assert best_p.objective(objective) == best_s.objective(objective)
-        assert best_p.mapping == best_s.mapping
+        best_su, _ = tcm_map(ein, arch, objective=objective,
+                             share_incumbents=False)
+        best_pu, _ = tcm_map(ein, arch, objective=objective, workers=2,
+                             share_incumbents=False)
+        assert best_pu.mapping == best_su.mapping
+        assert best_su.objective(objective) == best_s.objective(objective)
 
 
 def test_make_engine_selection():
