@@ -47,12 +47,34 @@ def main(argv) -> int:
             f"QK n_expanded {perf['qk_n_expanded']} > {limit_n:.0f} "
             f"(reference {ref['qk_n_expanded']}) — prune power lost")
 
+    # fused QK->AV joint search (same two gates, when the record has it)
+    flimit_s = flimit_n = None
+    if "fused_qkav_s" in ref and "fused_qkav_s" in perf:
+        flimit_s = ref["fused_qkav_s"] * ref["max_time_regression"]
+        if perf["fused_qkav_s"] > flimit_s:
+            failures.append(
+                f"fused QK+AV search took {perf['fused_qkav_s']}s > "
+                f"{flimit_s}s (reference {ref['fused_qkav_s']}s x "
+                f"{ref['max_time_regression']})")
+        flimit_n = (ref["fused_qkav_n_expanded"]
+                    * ref["max_n_expanded_regression"])
+        if perf["fused_qkav_n_expanded"] > flimit_n:
+            failures.append(
+                f"fused QK+AV n_expanded {perf['fused_qkav_n_expanded']} > "
+                f"{flimit_n:.0f} (reference "
+                f"{ref['fused_qkav_n_expanded']}) — prune power lost")
+
     for line in failures:
         print(f"PERF REGRESSION: {line}")
     if not failures:
-        print(f"perf ok: QK search {perf['qk_search_s']}s "
-              f"(limit {limit_s}s), n_expanded {perf['qk_n_expanded']} "
-              f"(limit {limit_n:.0f})")
+        msg = (f"perf ok: QK search {perf['qk_search_s']}s "
+               f"(limit {limit_s}s), n_expanded {perf['qk_n_expanded']} "
+               f"(limit {limit_n:.0f})")
+        if flimit_s is not None:
+            msg += (f"; fused QK+AV {perf['fused_qkav_s']}s "
+                    f"(limit {flimit_s}s), n_expanded "
+                    f"{perf['fused_qkav_n_expanded']} (limit {flimit_n:.0f})")
+        print(msg)
     return 1 if failures else 0
 
 

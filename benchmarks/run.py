@@ -36,7 +36,9 @@ def perf_smoke() -> dict:
     P0 is small enough to run the unshared search too, giving a CI-cheap
     bound-propagation speedup ratio.
     """
-    from repro.core.mapper import tcm_map
+    from repro.core.einsum import batched_matmul
+    from repro.core.fusion import FusedWorkload, GroupEdge
+    from repro.core.mapper import tcm_map, tcm_map_group
     from repro.core.presets import (nvdla_like, small_matmul_suite,
                                     tpu_v4i_like)
     from repro.core.search import clear_caches
@@ -59,6 +61,25 @@ def perf_smoke() -> dict:
     assert (best_s.energy, best_s.latency, best_s.edp) == \
         (best_u.energy, best_u.latency, best_u.edp)
 
+    # fused QK -> AV joint search (smoke-sized attention pair, serial):
+    # gates the fusion-aware machinery the same way — wall time against a
+    # committed reference, deterministic n_expanded against prune power
+    fqk = batched_matmul("fqk", 8, 4, 32, 64)
+    fav = batched_matmul("fav", 8, 4, 64, 32)
+    group = FusedWorkload("qk+av", (fqk, fav), (GroupEdge(0, 1, "Z", "A"),))
+    tpu = tpu_v4i_like()
+    clear_caches()
+    t0 = time.perf_counter()
+    bq, _ = tcm_map(fqk, tpu)
+    ba, _ = tcm_map(fav, tpu)
+    fused, f_stats = tcm_map_group(
+        group, tpu,
+        inc_obj=(bq.energy + ba.energy) * (bq.latency + ba.latency))
+    fused_s = time.perf_counter() - t0
+    assert fused is not None
+    assert fused.energy <= bq.energy + ba.energy
+    assert fused.latency <= bq.latency + ba.latency
+
     perf = {
         "qk_search_s": round(qk_s, 3),
         "qk_n_expanded": stats.n_expanded,
@@ -68,10 +89,15 @@ def perf_smoke() -> dict:
         "p0_bnb_speedup": round(p0_unshared_s / max(p0_shared_s, 1e-9), 2),
         "p0_n_expanded_unshared": s_u.n_expanded,
         "p0_n_expanded_shared": s_s.n_expanded,
+        "fused_qkav_s": round(fused_s, 3),
+        "fused_qkav_n_expanded": f_stats.n_expanded,
+        "fused_qkav_edp": fused.edp,
     }
     print(f"# perf-smoke: QK search {qk_s:.2f}s "
           f"(n_expanded={stats.n_expanded}), "
-          f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x",
+          f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x, "
+          f"fused QK+AV {fused_s:.2f}s "
+          f"(n_expanded={f_stats.n_expanded})",
           file=sys.stderr, flush=True)
     return perf
 
@@ -81,7 +107,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=("small", "paper"), default="small")
     ap.add_argument("--only", default=None,
                     choices=("table2", "fig6", "fig7", "fig8", "table3",
-                             "table4"))
+                             "table4", "table5"))
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
@@ -106,6 +132,7 @@ def main() -> None:
 
     from . import fig6_breakdown, fig7_scaling, fig8_model_speed
     from . import table2_pruning, table3_edp, table4_network_edp
+    from . import table5_fusion_edp
 
     benches = {
         "table2": table2_pruning.run,
@@ -114,6 +141,7 @@ def main() -> None:
         "fig8": fig8_model_speed.run,
         "table3": table3_edp.run,
         "table4": table4_network_edp.run,
+        "table5": table5_fusion_edp.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}
@@ -146,6 +174,14 @@ def main() -> None:
                 })
             if "speedup_numpy" in row:
                 record["perf"]["curried_model_speedup"] = row["speedup_numpy"]
+        t5 = results.get("table5") if args.scale == "small" else None
+        if t5 and "qkav_smoke" in t5:
+            row = t5["qkav_smoke"]
+            record["perf"].update({
+                "fused_qkav_s": round(row["t_fused_s"], 3),
+                "fused_qkav_n_expanded": row["n_expanded"],
+                "fused_qkav_edp": row["fused_edp_pJs"],
+            })
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -1,0 +1,95 @@
+"""Table 5 (repo extension): fused vs independent attention mapping.
+
+Jointly maps the QK -> AV attention cascade (the fig8 attention workload)
+with the logits tensor pinned on-chip and the shared (head, query-row,
+key-column) rank classes co-tiled, and compares against the sum of the
+independent per-einsum optima — the quantity the per-layer planner reports.
+
+``small`` scale runs the small-suite attention pair QK(64,256,64,256) /
+AV(64,256,256,64) plus a smoke-sized pair on the TPU-v4i-like architecture;
+``paper`` scale runs the GPT-3 6.7B attention shapes (hours; logged in
+EXPERIMENTS.md).  Asserts the fusion contract either way: the pinned logits
+never get a DRAM storage node, and the fused optimum is no worse than the
+independent baseline on both energy and latency.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import csv_line
+
+
+def _pairs(scale: str):
+    from repro.core.einsum import batched_matmul
+    from repro.core.presets import GPT3_BH, GPT3_D_HEAD, GPT3_SEQ
+
+    if scale == "paper":
+        yield ("QK+AV", batched_matmul("QK", GPT3_BH, GPT3_SEQ, GPT3_D_HEAD,
+                                       GPT3_SEQ),
+               batched_matmul("AV", GPT3_BH, GPT3_SEQ, GPT3_SEQ,
+                              GPT3_D_HEAD))
+        return
+    yield ("qkav_smoke", batched_matmul("qk", 8, 4, 32, 64),
+           batched_matmul("av", 8, 4, 64, 32))
+    yield ("QK+AV", batched_matmul("QK", 64, 256, 64, 256),
+           batched_matmul("AV", 64, 256, 256, 64))
+
+
+def run(scale: str = "small", workers=None) -> dict:
+    from repro.core.fusion import FusedWorkload, GroupEdge
+    from repro.core.looptree import Storage
+    from repro.core.mapper import tcm_map, tcm_map_group
+    from repro.core.presets import tpu_v4i_like
+    from repro.core.search import clear_caches, make_engine
+
+    arch = tpu_v4i_like()
+    results = {}
+    for name, qk, av in _pairs(scale):
+        w = FusedWorkload(name, (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+        clear_caches()
+        engine = make_engine(None, workers)
+        try:
+            t0 = time.perf_counter()
+            bq, _ = tcm_map(qk, arch, engine=engine)
+            ba, _ = tcm_map(av, arch, engine=engine)
+            t_indep = time.perf_counter() - t0
+            ind_e = bq.energy + ba.energy
+            ind_l = bq.latency + ba.latency
+
+            t0 = time.perf_counter()
+            fused, stats = tcm_map_group(w, arch, engine=engine,
+                                         inc_obj=ind_e * ind_l)
+            t_fused = time.perf_counter() - t0
+        finally:
+            engine.close()
+
+        assert fused is not None, f"{name}: no fused mapping found"
+        # the fusion contract: logits off DRAM, no worse on either axis
+        for i, mapping in enumerate(fused.mapping.members):
+            for n in mapping:
+                if isinstance(n, Storage) and \
+                        (i, n.tensor) in fused.mapping.pinned:
+                    assert n.level >= fused.mapping.pin_level > 0
+        assert fused.energy <= ind_e and fused.latency <= ind_l
+
+        ind_edp = ind_e * ind_l
+        delta = (1 - fused.edp / ind_edp) * 100
+        derived = (f"fused_edp={fused.edp:.4g} indep_edp={ind_edp:.4g} "
+                   f"saving={delta:.1f}% pin=L{fused.mapping.pin_level} "
+                   f"n_expanded={stats.n_expanded}")
+        print(csv_line(f"table5/{name}", t_fused * 1e6, derived))
+        results[name] = {
+            "fused_energy_pJ": fused.energy,
+            "fused_latency_s": fused.latency,
+            "fused_edp_pJs": fused.edp,
+            "indep_energy_pJ": ind_e,
+            "indep_latency_s": ind_l,
+            "indep_edp_pJs": ind_edp,
+            "edp_saving_pct": delta,
+            "pin_level": fused.mapping.pin_level,
+            "n_fused_units": stats.n_skeletons,
+            "n_expanded": stats.n_expanded,
+            "t_fused_s": t_fused,
+            "t_indep_s": t_indep,
+        }
+    return results

@@ -43,15 +43,24 @@ def main():
           f" optimal;  LOMA-like: {loma.objective('edp') / best.edp:.2f}x")
 
     # whole-model mapping: every layer of a real config in one call, with
-    # repeated shapes deduplicated and persisted in .tcm_cache/ (re-running
-    # this script serves the mappings from disk in milliseconds)
+    # repeated shapes deduplicated, fusable cascades (QK->AV, gated FFN)
+    # jointly mapped with their intermediates pinned on-chip, and results
+    # persisted in .tcm_cache/ (re-running this script serves the mappings
+    # from disk in milliseconds)
     report = map_network(get_config("qwen1_5_0_5b"), arch, mode="decode",
                          batch=2, seq=128, cache=MappingCache(),
                          workers=args.workers)
     print(f"\nwhole-model mapping ({report.config}): "
-          f"{len(report.rows)} layer ops -> {len(report.unique)} searches, "
+          f"{len(report.rows)} layer ops -> {len(report.unique)} searches "
+          f"+ {len(report.fused)} fused groups, "
           f"network EDP {report.total_edp:.4g} pJ*s "
           f"(cache hit rate {report.cache_hit_rate:.0%})")
+    for f in report.fused:
+        if f.edp_delta is not None:
+            print(f"  fused {f.ops}: group EDP {f.fused_edp:.4g} vs "
+                  f"{f.unfused_edp:.4g} independent "
+                  f"({'adopted' if f.adopted else 'fell back'}, "
+                  f"saving {100 * f.edp_delta / f.unfused_edp:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -69,16 +69,28 @@ def _admitted(einsum: Einsum, above: Storage, below: Optional[Storage],
     return out
 
 
-def make_slots(einsum: Einsum, arch: Arch, dp: Dataplacement) -> List[Slot]:
+def make_slots(einsum: Einsum, arch: Arch, dp: Dataplacement,
+               n_backing: Optional[int] = None) -> List[Slot]:
     nodes = list(dp)
-    # Slots only start after the last level-0 node (no loops between backing
-    # nodes: nothing above to refetch from).
-    last_backing = max(i for i, s in enumerate(nodes) if s.level == 0)
+    # Slots only start after the last backing node (no loops between backing
+    # nodes: nothing above to refetch from).  By default the backing region
+    # is the level-0 prefix; fused-group members pass ``n_backing`` to extend
+    # it over their pinned-intermediate nodes, which sit directly below the
+    # shared co-tiled loop prefix and behave like a backing store for the
+    # member's own loops (their tile is fixed by the prefix, so loops below
+    # cannot inflate it).
+    if n_backing is None:
+        last_backing = max(i for i, s in enumerate(nodes) if s.level == 0)
+    else:
+        last_backing = n_backing - 1
     slots: List[Slot] = []
     for i in range(last_backing, len(nodes)):
         above = nodes[i]
         below = nodes[i + 1] if i + 1 < len(nodes) else None
-        above_is_backing = above.level == 0
+        # only the slot directly under the backing region counts as
+        # backed-above (identical to the historical ``above.level == 0``
+        # check when the backing region is the level-0 prefix)
+        above_is_backing = i == last_backing
         allowed = _admitted(einsum, above, below, above_is_backing)
         above_t = einsum.tensor(above.tensor)
         below_t = einsum.tensor(below.tensor) if below is not None else None
@@ -121,12 +133,20 @@ def _spatial_block(einsum: Einsum, arch: Arch, fanout_idx: int) -> List[Loop]:
     return out
 
 
-def enumerate_skeletons(einsum: Einsum, arch: Arch,
-                        dp: Dataplacement) -> Iterator[Mapping]:
-    """All non-redundant dataflow skeletons for a dataplacement."""
-    slots = make_slots(einsum, arch, dp)
+def enumerate_skeletons(einsum: Einsum, arch: Arch, dp: Dataplacement,
+                        n_backing: Optional[int] = None) -> Iterator[Mapping]:
+    """All non-redundant dataflow skeletons for a dataplacement.
+
+    ``n_backing`` extends the backing region beyond the level-0 prefix (see
+    :func:`make_slots`); fused-group members use it so no member loops are
+    generated above their pinned-intermediate nodes.
+    """
+    slots = make_slots(einsum, arch, dp, n_backing)
     nodes = list(dp)
-    last_backing = max(i for i, s in enumerate(nodes) if s.level == 0)
+    if n_backing is None:
+        last_backing = max(i for i, s in enumerate(nodes) if s.level == 0)
+    else:
+        last_backing = n_backing - 1
 
     # spatial blocks sit at the boundary above the first storage node of a
     # level deeper than fanout.above_level (or above compute if none).

@@ -59,7 +59,16 @@ def storages(mapping: Mapping) -> List[Storage]:
     return [n for n in mapping if isinstance(n, Storage)]
 
 
-def validate_structure(einsum: Einsum, arch: Arch, mapping: Mapping) -> None:
+def validate_structure(einsum: Einsum, arch: Arch, mapping: Mapping,
+                       pinned: Optional[dict] = None) -> None:
+    """Check the mapping invariants.
+
+    ``pinned`` (fused-group members only) maps tensor names to a non-DRAM
+    pin level: those tensors are *exempt* from level-0 backing — their
+    outermost storage node must instead sit at exactly the pin level (the
+    intermediate never exists at DRAM).
+    """
+    pinned = pinned or {}
     seen = set()
     last_level_per_tensor = {}
     names = {t.name for t in einsum.tensors}
@@ -79,12 +88,23 @@ def validate_structure(einsum: Einsum, arch: Arch, mapping: Mapping) -> None:
             assert prev is None or n.level > prev, (
                 f"{n.tensor} storage out of hierarchy order")
             last_level_per_tensor[n.tensor] = n.level
+            if n.tensor in pinned:
+                assert n.level >= pinned[n.tensor], (
+                    f"pinned {n.tensor} must not exist above level "
+                    f"{pinned[n.tensor]}")
+                if prev is None:
+                    assert n.level == pinned[n.tensor], (
+                        f"pinned {n.tensor} outermost node must sit at "
+                        f"level {pinned[n.tensor]}")
             if n.level == 0:
                 assert not seen_nonzero, "backing store must come first"
                 level0.add(n.tensor)
             else:
                 seen_nonzero = True
-    assert level0 == names, f"backing store must hold all tensors, has {level0}"
+    assert level0 == names - set(pinned), (
+        f"backing store must hold all unpinned tensors, has {level0}")
+    for t in pinned:
+        assert t in last_level_per_tensor, f"pinned {t} has no storage node"
 
     # loop bound products
     prod: dict = {v: 1 for v in einsum.rank_shapes}

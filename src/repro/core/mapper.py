@@ -23,6 +23,7 @@ from .arch import Arch
 from .dataflow import count_unpruned_dataflows, make_slots
 from .einsum import Einsum
 from .factor import prime_factorization as _prime_factorization
+from .fusion import (FusedWorkload, enumerate_fused_skeletons, validate_fused)
 from .looptree import Loop, Mapping, validate_structure
 from .search import (MapperStats, MappingResult, SearchEngine, WorkUnit,
                      cached_dataplacements, cached_skeletons, make_engine)
@@ -161,13 +162,7 @@ def tcm_map(
 
     best: Optional[MappingResult] = None
     try:
-        for r in engine.run(units):
-            stats.merge(r.stats)
-            c = r.candidate
-            if c is not None and (
-                    best is None
-                    or c.objective(objective) < best.objective(objective)):
-                best = c
+        best = _run_and_merge(units, objective, engine, stats)
     finally:
         # engines passed in by the caller stay open (netmap reuses one pool
         # across a whole model's searches); self-made ones are torn down
@@ -177,6 +172,99 @@ def tcm_map(
         validate_structure(einsum, arch, best.mapping)
     if verbose:
         print(f"merged {len(units)} units: "
+              f"best={best.edp if best else None}")
+
+    stats.finalize()
+    stats.t_total = time.perf_counter() - t0
+    return best, stats
+
+
+def _run_and_merge(units, objective: str, engine: SearchEngine,
+                   stats: MapperStats,
+                   inc_obj: float = float("inf")) -> Optional[MappingResult]:
+    """Dispatch units through ``engine`` and reduce in enumeration order.
+
+    The strict ``<`` comparison in unit order is the bit-parity contract:
+    both backends return results in unit order, so the selected optimum is
+    identical serial or parallel.
+    """
+    best: Optional[MappingResult] = None
+    for r in engine.run(units, inc_obj):
+        stats.merge(r.stats)
+        c = r.candidate
+        if c is not None and (
+                best is None
+                or c.objective(objective) < best.objective(objective)):
+            best = c
+    return best
+
+
+def tcm_map_group(
+    workload: FusedWorkload,
+    arch: Arch,
+    objective: str = "edp",
+    prune_partial: bool = True,
+    verbose: bool = False,
+    engine: Optional[SearchEngine] = None,
+    backend: Optional[str] = None,
+    workers: Optional[int] = None,
+    share_incumbents: bool = True,
+    max_units: Optional[int] = 4096,
+    inc_obj: float = float("inf"),
+) -> Tuple[Optional[MappingResult], MapperStats]:
+    """Jointly map a fusion group: intermediates pinned on-chip, shared
+    rank classes co-tiled, every (pin level, member dataplacement, member
+    skeleton) combination dispatched as one fused work unit through the
+    same search engines as ``tcm_map`` (incumbent sharing included).
+
+    Returns ``(None, stats)`` when the group admits no pinned mapping (no
+    legal pin level, a member cannot satisfy its pinned dataplacement, or
+    the joint space exceeds ``max_units``) — callers fall back to
+    independent per-einsum mapping.  The returned ``MappingResult`` carries
+    a :class:`~repro.core.fusion.FusedMapping`; energy/latency are summed
+    over the sequentially executed members, so its values compose with
+    per-einsum results in network totals.
+
+    ``inc_obj`` optionally seeds the branch-and-bound with the
+    independent-mapping objective: fused candidates provably no better than
+    the fallback are pruned.  When the fused optimum beats the bound, its
+    value is found exactly (identical serial or parallel); otherwise the
+    caller's fallback semantics apply regardless of what survives.
+    """
+    stats = MapperStats()
+    t0 = time.perf_counter()
+
+    t = time.perf_counter()
+    skeletons = enumerate_fused_skeletons(workload, arch,
+                                          max_units=max_units)
+    stats.t_dataflow = time.perf_counter() - t
+    stats.n_skeletons = len(skeletons)
+    if not skeletons:
+        stats.finalize()
+        stats.t_total = time.perf_counter() - t0
+        return None, stats
+
+    units = [WorkUnit(i, workload, arch, sk, objective, prune_partial)
+             for i, sk in enumerate(skeletons)]
+    owns_engine = engine is None
+    if owns_engine:
+        engine = make_engine(backend, workers,
+                             share_incumbents=share_incumbents)
+    if verbose:
+        print(f"dispatching {len(units)} fused work units for "
+              f"{workload.name} via {engine.backend}")
+
+    best: Optional[MappingResult] = None
+    try:
+        best = _run_and_merge(units, objective, engine, stats,
+                              inc_obj=inc_obj)
+    finally:
+        if owns_engine:
+            engine.close()
+    if best is not None:
+        validate_fused(workload, arch, best.mapping)
+    if verbose:
+        print(f"merged {len(units)} fused units: "
               f"best={best.edp if best else None}")
 
     stats.finalize()

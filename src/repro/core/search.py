@@ -40,6 +40,7 @@ redo dataplacement/dataflow enumeration or model currying.  Cache keys are
 """
 from __future__ import annotations
 
+import functools
 import math
 import multiprocessing as mp
 import os
@@ -47,14 +48,16 @@ import time
 from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .arch import Arch
 from .dataflow import enumerate_skeletons
 from .dataplacement import Dataplacement, enumerate_dataplacements
 from .einsum import Einsum
+from .fusion import (FusedSkeleton, FusedWorkload, workload_from_key,
+                     workload_key)
 from .looptree import Mapping
-from .model import CurriedModel
+from .model import CurriedModel, FusedCurriedModel
 from .tileshape import beam_objective, explore
 
 # --------------------------------------------------------------------------
@@ -151,7 +154,10 @@ def einsum_key(einsum: Einsum) -> EinsumKey:
     return (einsum.tensors, tuple(sorted(einsum.rank_shapes.items())))
 
 
-@lru_cache(maxsize=None)
+# bounded (was maxsize=None): long multi-model netmap sweeps touch an
+# unbounded stream of distinct einsum shapes, and each key here anchors the
+# much heavier downstream memos — see clear_search_caches()
+@lru_cache(maxsize=4096)
 def _einsum_from_key(key: EinsumKey) -> Einsum:
     return Einsum(name="<cached>", tensors=key[0], rank_shapes=dict(key[1]))
 
@@ -184,17 +190,38 @@ def cached_skeletons(einsum: Einsum, arch: Arch, dp: Dataplacement
     return _skeletons_cached(einsum_key(einsum), arch, dp)
 
 
-def cached_curried_model(einsum: Einsum, arch: Arch, skeleton: Mapping
-                         ) -> CurriedModel:
+@lru_cache(maxsize=256)
+def _fused_curried_cached(wkey, arch: Arch, skeleton: FusedSkeleton
+                          ) -> FusedCurriedModel:
+    return FusedCurriedModel(workload_from_key(wkey), arch, skeleton)
+
+
+def cached_curried_model(einsum, arch: Arch, skeleton):
+    """Memoized currying; dispatches on workload kind (einsum vs fused
+    group), so the engines and their worker entry points run fused work
+    units without change."""
+    if isinstance(einsum, FusedWorkload):
+        return _fused_curried_cached(workload_key(einsum), arch, skeleton)
     return _curried_cached(einsum_key(einsum), arch, skeleton)
 
 
-def clear_caches() -> None:
-    """Drop all memoized enumeration state (benchmark hygiene)."""
+def clear_search_caches() -> None:
+    """Drop all memoized enumeration/currying state.
+
+    Called from :meth:`SearchEngine.close` so long multi-model sweeps
+    (``repro.netmap`` over many configs) release the curried models and
+    enumerations of finished batches instead of growing without bound; the
+    persistent on-disk ``MappingCache`` carries cross-run reuse.
+    """
     _einsum_from_key.cache_clear()
     _dataplacements_cached.cache_clear()
     _skeletons_cached.cache_clear()
     _curried_cached.cache_clear()
+    _fused_curried_cached.cache_clear()
+
+
+# historical name (benchmark hygiene call sites)
+clear_caches = clear_search_caches
 
 
 # --------------------------------------------------------------------------
@@ -204,12 +231,21 @@ def clear_caches() -> None:
 
 @dataclass(frozen=True)
 class WorkUnit:
-    """One independent (dataplacement, dataflow-skeleton) search task."""
+    """One independent search task.
+
+    For a single einsum this is one (dataplacement, dataflow-skeleton)
+    pair; for a fusion group, ``einsum`` is a
+    :class:`~repro.core.fusion.FusedWorkload` and ``skeleton`` a
+    :class:`~repro.core.fusion.FusedSkeleton` (pin level + per-member
+    sub-skeletons).  ``cached_curried_model`` dispatches on the kind, so
+    the engines — incumbent sharing, beam seeding, compiled criterion
+    kernels — run both unchanged.
+    """
 
     index: int  # position in the driver's enumeration order
-    einsum: Einsum
+    einsum: Union[Einsum, FusedWorkload]
     arch: Arch
-    skeleton: Mapping
+    skeleton: Union[Mapping, FusedSkeleton]
     objective: str = "edp"
     prune_partial: bool = True
 
@@ -301,11 +337,21 @@ class SearchEngine:
     backend = "abstract"
     share_incumbents = True
 
-    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+    def run(self, units: Sequence[WorkUnit],
+            inc_obj: float = float("inf")) -> List[WorkResult]:
+        """Execute ``units``; ``inc_obj`` optionally seeds the incumbent
+        with an externally known objective bound (e.g. a fusion group's
+        independent-mapping sum — candidates provably no better than the
+        fallback need not be explored).  With the default ``inf`` this is
+        exactly the historical search."""
         raise NotImplementedError
 
     def close(self) -> None:
-        """Release executor resources (worker pools); no-op by default."""
+        """Release executor resources (worker pools) and drop the search
+        memos (:func:`clear_search_caches`), so batch drivers that open and
+        close engines per model do not accumulate curried models across a
+        long sweep."""
+        clear_search_caches()
 
     @staticmethod
     def _sharing_applies(units: Sequence[WorkUnit]) -> bool:
@@ -326,10 +372,11 @@ class SerialEngine(SearchEngine):
     def __init__(self, share_incumbents: bool = True):
         self.share_incumbents = share_incumbents
 
-    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+    def run(self, units: Sequence[WorkUnit],
+            inc_obj: float = float("inf")) -> List[WorkResult]:
         if not (self.share_incumbents and self._sharing_applies(units)):
-            return [run_work_unit(u) for u in units]
-        inc = float("inf")
+            return [run_work_unit(u, inc_obj=inc_obj) for u in units]
+        inc = inc_obj
         t_seed: Dict[int, Tuple[float, float]] = {}
         for u in units:
             i, obj, t_curry, t_dive = run_seed_unit(u)
@@ -443,9 +490,10 @@ class ProcessPoolEngine(SearchEngine):
                 initargs=(self._shared if self.share_incumbents else None,))
         return self._executor
 
-    def run(self, units: Sequence[WorkUnit]) -> List[WorkResult]:
+    def run(self, units: Sequence[WorkUnit],
+            inc_obj: float = float("inf")) -> List[WorkResult]:
         if self.workers <= 1 or len(units) <= 1:
-            return SerialEngine(self.share_incumbents).run(units)
+            return SerialEngine(self.share_incumbents).run(units, inc_obj)
         # Unit costs are heavily skewed (one skeleton can dominate the whole
         # search), so default to dynamic scheduling (chunksize 1); batching
         # only pays off once there are very many units per worker.
@@ -453,8 +501,11 @@ class ProcessPoolEngine(SearchEngine):
         try:
             executor = self._get_executor()
             if not (self.share_incumbents and self._sharing_applies(units)):
-                return list(executor.map(run_work_unit, units,
-                                         chunksize=chunksize))
+                if inc_obj != float("inf"):
+                    fn = functools.partial(run_work_unit, inc_obj=inc_obj)
+                else:
+                    fn = run_work_unit
+                return list(executor.map(fn, units, chunksize=chunksize))
             # phase 1: beam-dive every unit, seed the shared incumbent.
             # Memoization is per-process, so a phase-2 unit landing on a
             # different worker re-curries and re-dives — the pool trades
@@ -463,7 +514,8 @@ class ProcessPoolEngine(SearchEngine):
                                       chunksize=chunksize))
             with self._shared.get_lock():
                 self._shared.value = min(
-                    (s[1] for s in seeds), default=float("inf"))
+                    (s[1] for s in seeds), default=inc_obj)
+                self._shared.value = min(self._shared.value, inc_obj)
             # phase 2: full explorations against the improving global bound
             results = list(executor.map(run_work_unit_shared, units,
                                         chunksize=chunksize))
@@ -483,6 +535,7 @@ class ProcessPoolEngine(SearchEngine):
             self._executor.shutdown()
             self._executor = None
             self._shared = None
+        clear_search_caches()
 
 
 def make_engine(backend: Optional[str] = None,

@@ -254,7 +254,9 @@ class _Stepper:
         cache = cm.stepper_cache
         st = cache.get(objective)
         if st is None:
-            st = cache[objective] = cls(cm, objective)
+            impl = _FusedStepper if getattr(cm, "is_fused", False) else \
+                _Stepper
+            st = cache[objective] = impl(cm, objective)
         return st
 
     def __init__(self, cm: CurriedModel, objective: str):
@@ -431,6 +433,329 @@ class _Stepper:
             return e_lb
         return l_lb
 
+    def dominance_keys(self, rem, fan_rem, step: int) -> np.ndarray:
+        """Cannot-compare group keys for the dominance prune at ``step``."""
+        return np.concatenate([rem, fan_rem], axis=1)
+
+
+class _FusedStepper:
+    """Expansion machinery for fused-group joint exploration.
+
+    Same public surface as :class:`_Stepper`, generalized from per-rank-var
+    quotients to per-(member, var) *chains*: a shared-prefix site divides
+    every chain of its class in lockstep (the co-tiling), member sites
+    divide their own chain, and sites shared by structurally tied members
+    divide all their twins' chains at once.  Prefix sites are explored
+    *first*, so from step ``n_classes`` on every chain's remaining quotient
+    is exact and the per-chain lower-bound rule of ``_lb_terms`` applies
+    unchanged; during the first steps, chains whose prefix bound is still
+    free fall back to a relaxed (weaker but sound) per-symbol bound: every
+    unknown bound of chain ``c`` divides ``rem_c``, so it lies in
+    ``[1, rem_c]``.
+
+    Dominance criteria are arm-wise over all members' latency arms plus the
+    summed energy — arm-wise <= implies each member's max <=, hence the
+    fused (sum-of-maxes) latency <= — so pruning decisions remain sound for
+    the joint objective.
+    """
+
+    @classmethod
+    def get(cls, cm, objective: str) -> "_FusedStepper":
+        return _Stepper.get(cm, objective)
+
+    def __init__(self, cm, objective: str):
+        self.cm = cm
+        self.objective = objective
+        self.sites = cm.sites
+        self.site_chains = cm.site_chains
+        self.site_fans = cm.site_fans
+        self.site_member = cm.site_member
+        self.chain_shapes = list(cm.chain_shapes)
+        n_sites = len(self.sites)
+        n_chains = len(self.chain_shapes)
+        n_members = len(cm.workload.members)
+
+        # fanout capacity is per member phase: each member drives the array
+        # on its own, so capacity columns are (member, fanout, dim)
+        self.fan_dims: List[Tuple[int, int, int, int]] = []
+        for mi in range(n_members):
+            for fi, fan in enumerate(cm.arch.fanouts):
+                for d, cap in enumerate(fan.dims):
+                    self.fan_dims.append((mi, fi, d, cap))
+        self.fd_idx = {(mi, fi, d): i
+                       for i, (mi, fi, d, _) in enumerate(self.fan_dims)}
+        self.divisor_cache: Dict[int, np.ndarray] = {}
+        self.sym_index = {s.sym: i for i, s in enumerate(self.sites)}
+        self.sym_chains = {s.sym: self.site_chains[k]
+                           for k, s in enumerate(self.sites)}
+        self.prefix_sym_of_chain = list(cm.chain_prefix_sym)
+
+        # explore order: prefix sites first (class order), then per member
+        # the historical heuristic — chains by deepest site, innermost
+        # first, temporal absorber last
+        self.explore_order: List[int] = [
+            k for k in range(n_sites) if self.site_member[k] is None]
+        self.absorber: Dict[int, Tuple[int, ...]] = {}
+        chain_sites: Dict[int, List[int]] = {ci: [] for ci in range(n_chains)}
+        for k in range(n_sites):
+            if self.site_member[k] is None:
+                continue
+            for ci in self.site_chains[k]:
+                chain_sites[ci].append(k)
+        seen = set(self.explore_order)
+        for mi in range(n_members):
+            member_chains = [
+                ci for (m, v), ci in sorted(cm.chain_ids.items(),
+                                            key=lambda kv: kv[1])
+                if m == mi and chain_sites[ci]]
+            member_chains.sort(
+                key=lambda ci: -max(self.sites[k].index
+                                    for k in chain_sites[ci]))
+            for ci in member_chains:
+                ks = sorted(chain_sites[ci],
+                            key=lambda k: -self.sites[k].index)
+                temporal = [k for k in ks if not self.sites[k].spatial]
+                if temporal:
+                    ab = temporal[-1]
+                    ks = [k for k in ks if k != ab] + [ab]
+                    self.absorber[ab] = self.absorber.get(ab, ()) + (ci,)
+                for k in ks:
+                    if k not in seen:
+                        seen.add(k)
+                        self.explore_order.append(k)
+        assert len(self.explore_order) == n_sites
+
+        # lower-bound machinery: one rem pseudo-symbol per chain
+        self.ext_index = dict(self.sym_index)
+        for ci in range(n_chains):
+            self.ext_index[f"rem:{ci}"] = n_sites + ci
+
+        self.usage_polys = [p for _, p in cm.usage_entries]
+        self.latency_arm_groups = [list(part.arms)
+                                   for part in cm.latency_parts]
+        self.objective_polys = (
+            [a for arms in self.latency_arm_groups for a in arms]
+            + [cm.energy])
+        all_known = frozenset(self.sym_index)
+        self.usage_kernels = []
+        for cap, p in cm.usage_entries:
+            if cap == float("inf"):
+                continue
+            crit = grouped_criteria([p], all_known)
+            if crit:
+                self.usage_kernels.append(
+                    (CriteriaKernel(crit, self.sym_index), cap))
+        self._dom_kernels: Dict[frozenset, Optional[CriteriaKernel]] = {}
+        self._lb_kernels: Dict[frozenset, tuple] = {}
+        self._beam: object = _UNSET
+
+        # live-column masks per step: a chain / fanout column whose sites are
+        # all expanded can never change again, so keeping it in the
+        # cannot-compare keys would only fragment dominance groups (finished
+        # members would never prune).  Masks depend only on the fixed
+        # explore order, so they are precomputed.
+        n_steps = len(self.explore_order)
+        self._live_chains = []
+        self._live_fans = []
+        for step in range(n_steps):
+            future = self.explore_order[step + 1:]
+            live_c = np.zeros(n_chains, dtype=bool)
+            live_f = np.zeros(len(self.fan_dims), dtype=bool)
+            for k in future:
+                for ci in self.site_chains[k]:
+                    live_c[ci] = True
+                for fd in self.site_fans[k]:
+                    live_f[self.fd_idx[fd]] = True
+            self._live_chains.append(live_c)
+            self._live_fans.append(live_f)
+
+    def beam_incumbent(self):
+        if self._beam is _UNSET:
+            self._beam = _beam_incumbent(self)
+        return self._beam
+
+    def dominance_kernel(self, known: frozenset) -> Optional[CriteriaKernel]:
+        # usage polys whose symbols are all known are fixed: both compared
+        # candidates already passed the exact capacity check, so the
+        # constraint cannot discriminate futures — drop it from the criteria
+        # (objective polys always stay: their known parts feed the objective)
+        if known not in self._dom_kernels:
+            live_usage = [p for p in self.usage_polys
+                          if not p.symbols() <= known]
+            crits = grouped_criteria(
+                self.objective_polys + live_usage, known)
+            self._dom_kernels[known] = (
+                CriteriaKernel(crits, self.sym_index) if crits else None)
+        return self._dom_kernels[known]
+
+    def dominance_keys(self, rem, fan_rem, step: int) -> np.ndarray:
+        # dead chains normally end absorbed at rem == 1; a spatial-only
+        # chain can die unfinished, and such doomed candidates must not be
+        # allowed to dominate viable ones — key them apart by a doomed
+        # marker instead of the full (group-fragmenting) dead quotients
+        dead = ~self._live_chains[step]
+        doomed = (rem[:, dead] != 1).astype(np.int64)
+        return np.concatenate([rem[:, self._live_chains[step]], doomed,
+                               fan_rem[:, self._live_fans[step]]], axis=1)
+
+    def _lb_terms_fused(self, poly: Poly, known: frozenset,
+                        unassigned_by_chain: Dict[int, List[str]],
+                        relaxed: frozenset) -> Criterion:
+        """Per-monomial lower bound over completions, chain-aware.
+
+        Exact chains (prefix bound already assigned): the unknown bounds
+        primarily assigned to chain ``c`` multiply to exactly ``rem_c`` —
+        the per-var rule of :func:`_lb_terms` applies.  Relaxed chains
+        (prefix still free) and free prefix symbols themselves only satisfy
+        ``bound in [1, rem_c]`` per symbol, giving the weaker per-symbol
+        bound: ``rem_c^e`` for the exponents that hurt (negative under a
+        positive coefficient, positive under a negative one).
+        """
+        terms = []
+        for m in poly.monos:
+            kp: Dict[str, int] = {}
+            chain_exps: Dict[int, Dict[str, int]] = {}
+            for s, e in m.powers:
+                if s in known:
+                    kp[s] = kp.get(s, 0) + e
+                    continue
+                chains = self.sym_chains[s]
+                if self.sym_index[s] < len(self.cm.classes):
+                    # free prefix symbol: per-symbol relaxed bound against
+                    # its first chain's quotient
+                    ci = chains[0]
+                    if (m.coeff >= 0 and e < 0) or (m.coeff < 0 and e > 0):
+                        key = f"rem:{ci}"
+                        kp[key] = kp.get(key, 0) + e
+                else:
+                    ci = chains[0]  # primary chain
+                    chain_exps.setdefault(ci, {})[s] = e
+            for ci, exps in chain_exps.items():
+                if ci in relaxed:
+                    if m.coeff >= 0:
+                        e_star = sum(e for e in exps.values() if e < 0)
+                    else:
+                        e_star = sum(e for e in exps.values() if e > 0)
+                else:
+                    es = [exps.get(s, 0) for s in unassigned_by_chain[ci]]
+                    e_star = min(es) if m.coeff >= 0 else max(es)
+                if e_star != 0:
+                    key = f"rem:{ci}"
+                    kp[key] = kp.get(key, 0) + e_star
+            terms.append((m.coeff, tuple(sorted(kp.items()))))
+        return tuple(terms)
+
+    def lb_kernels(self, known: frozenset):
+        """Compiled (energy, per-member latency arms) LB kernels."""
+        if known not in self._lb_kernels:
+            unassigned_by_chain: Dict[int, List[str]] = {
+                ci: [] for ci in range(len(self.chain_shapes))}
+            relaxed = set()
+            for k, s in enumerate(self.sites):
+                if s.sym in known:
+                    continue
+                if self.site_member[k] is None:
+                    relaxed.update(self.site_chains[k])
+                else:
+                    unassigned_by_chain[self.site_chains[k][0]].append(s.sym)
+            relaxed = frozenset(relaxed)
+            e_crit = self._lb_terms_fused(self.cm.energy, known,
+                                          unassigned_by_chain, relaxed)
+            arm_kernels = tuple(
+                CriteriaKernel(
+                    [self._lb_terms_fused(a, known, unassigned_by_chain,
+                                          relaxed) for a in arms],
+                    self.ext_index)
+                for arms in self.latency_arm_groups)
+            self._lb_kernels[known] = (
+                CriteriaKernel([e_crit], self.ext_index), arm_kernels)
+        return self._lb_kernels[known]
+
+    def init_state(self):
+        n_sites = len(self.sites)
+        cols = np.ones((1, n_sites), dtype=np.int64)
+        rem = np.array([list(self.chain_shapes)], dtype=np.int64)
+        fan_rem = (np.array([[c for (_, _, _, c) in self.fan_dims]],
+                            dtype=np.int64)
+                   if self.fan_dims else np.zeros((1, 0), dtype=np.int64))
+        return cols, rem, fan_rem
+
+    def expand(self, k: int, cols, rem, fan_rem):
+        """Expand one site; returns new (cols, rem, fan_rem) or None."""
+        ab = self.absorber.get(k)
+        if ab:
+            # tied chains track identical quotients; absorb them all
+            cols = cols.copy()
+            cols[:, k] = rem[:, ab[0]]
+            rem = rem.copy()
+            for ci in ab:
+                rem[:, ci] = 1
+            return cols, rem, fan_rem
+        chains = self.site_chains[k]
+        shape = self.chain_shapes[chains[0]]
+        if shape not in self.divisor_cache:
+            self.divisor_cache[shape] = _divisors(shape)
+        divs = self.divisor_cache[shape]
+        fan_cols = [self.fd_idx[(mi, fi, d)]
+                    for (mi, fi, d) in self.site_fans[k]]
+        new_cols, new_rem, new_fan = [], [], []
+        for d in divs:
+            mask = rem[:, chains[0]] % d == 0
+            for ci in chains[1:]:
+                mask &= rem[:, ci] % d == 0
+            for fc in fan_cols:
+                mask &= fan_rem[:, fc] >= d
+            if not mask.any():
+                continue
+            c = cols[mask].copy()
+            c[:, k] = d
+            r = rem[mask].copy()
+            for ci in chains:
+                r[:, ci] //= d
+            f = fan_rem[mask]
+            if fan_cols:
+                f = f.copy()
+                for fc in fan_cols:
+                    f[:, fc] //= d
+            new_cols.append(c)
+            new_rem.append(r)
+            new_fan.append(f)
+        if not new_cols:
+            return None
+        return (np.concatenate(new_cols), np.concatenate(new_rem),
+                np.concatenate(new_fan))
+
+    def usage_lower_ok(self, cols, assigned_set) -> np.ndarray:
+        """Monotone lower-bound validity mask (phase-local capacities)."""
+        if not self.usage_kernels:
+            return np.ones(cols.shape[0], dtype=bool)
+        lower = cols.astype(np.float64)
+        unassigned = [i for i in range(len(self.sites))
+                      if i not in assigned_set]
+        if unassigned:
+            lower[:, unassigned] = 1.0
+        ok = np.ones(cols.shape[0], dtype=bool)
+        for kernel, cap in self.usage_kernels:
+            ok &= kernel(lower)[:, 0] <= cap
+        return ok
+
+    def objective_lower_bound(self, cols, rem, known: frozenset) -> np.ndarray:
+        """Sound joint lower bound: energy LB times the *sum* of per-member
+        latency-arm maxima (members run sequentially)."""
+        ext = np.concatenate(
+            [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
+        e_kernel, arm_kernels = self.lb_kernels(known)
+        e_lb = e_kernel(ext)[:, 0]
+        l_lb = None
+        for kernel in arm_kernels:
+            part = kernel(ext).max(axis=1)
+            l_lb = part if l_lb is None else l_lb + part
+        if self.objective == "edp":
+            return e_lb * l_lb
+        if self.objective == "energy":
+            return e_lb
+        return l_lb
+
 
 def beam_objective(cm: CurriedModel, objective: str = "edp") -> float:
     """Objective of the cheap beam-dive mapping (``inf`` when the dive finds
@@ -541,7 +866,7 @@ def explore(cm: CurriedModel, objective: str = "edp",
             kernel = st.dominance_kernel(known)
             if kernel is not None:
                 C = kernel(cols.astype(np.float64))
-                keys = np.concatenate([rem, fan_rem], axis=1)
+                keys = st.dominance_keys(rem, fan_rem, step)
                 keep = _grouped_pareto(C, keys)
                 stats.n_pruned_dominated += int((~keep).sum())
                 cols, rem, fan_rem = cols[keep], rem[keep], fan_rem[keep]

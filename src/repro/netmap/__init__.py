@@ -16,14 +16,17 @@ persistent on-disk cache, and compose per-model energy/latency/EDP reports.
 
 CLI: ``python -m repro.netmap --config qwen1_5_0_5b`` (see ``--help``).
 """
-from .cache import CACHE_VERSION, CacheHit, MappingCache, compute_key
-from .extract import LayerEinsum, extract_einsums
-from .planner import (LayerRow, NetworkReport, UniqueSearch, map_network,
-                      network_blockspec_tiles)
+from .cache import (CACHE_VERSION, CacheHit, MappingCache, compute_group_key,
+                    compute_key)
+from .extract import (LayerEinsum, NetworkGraph, extract_einsums,
+                      extract_graph)
+from .planner import (FusionRow, LayerRow, NetworkReport, UniqueSearch,
+                      map_network, network_blockspec_tiles)
 
 __all__ = [
-    "CACHE_VERSION", "CacheHit", "MappingCache", "compute_key",
-    "LayerEinsum", "extract_einsums",
-    "LayerRow", "NetworkReport", "UniqueSearch", "map_network",
+    "CACHE_VERSION", "CacheHit", "MappingCache", "compute_group_key",
+    "compute_key",
+    "LayerEinsum", "NetworkGraph", "extract_einsums", "extract_graph",
+    "FusionRow", "LayerRow", "NetworkReport", "UniqueSearch", "map_network",
     "network_blockspec_tiles",
 ]

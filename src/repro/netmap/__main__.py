@@ -51,6 +51,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-share-incumbents", action="store_true",
                     help="disable cross-unit bound propagation (slower, "
                     "value-identical optima; for benchmarking)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable fusion-aware joint mapping: map every "
+                    "layer op independently (reproduces the per-layer "
+                    "planner bit-for-bit)")
     ap.add_argument("--fast", action="store_true",
                     help="smoke-scale config + tiny shapes (CI-friendly)")
     ap.add_argument("--cache-dir", default=".tcm_cache",
@@ -83,12 +87,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                          batch=args.batch, seq=args.seq, cache=cache,
                          workers=args.workers,
                          share_incumbents=not args.no_share_incumbents,
+                         fuse=not args.no_fuse,
                          verbose=args.verbose)
     print(report.render())
     if report.cache_hits and not report.cache_misses:
+        t_cold = (sum(u.t_search for u in report.unique)
+                  + sum(f.t_search for f in report.fused))
         print("  (all mappings served from the persistent cache — "
-              "cold search would have taken "
-              f"{sum(u.t_search for u in report.unique):.3f}s)")
+              f"cold search would have taken {t_cold:.3f}s)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report.to_dict(), f, indent=2)

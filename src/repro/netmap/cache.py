@@ -36,6 +36,7 @@ from typing import Dict, Optional, Union
 
 from repro.core.arch import Arch
 from repro.core.einsum import Einsum
+from repro.core.fusion import FusedMapping, FusedWorkload
 from repro.core.looptree import Loop, Mapping, Storage
 from repro.core.search import MapperStats, MappingResult, einsum_key
 
@@ -43,7 +44,10 @@ from repro.core.search import MapperStats, MappingResult, einsum_key
 # but a value-tied optimal mapping can be tie-broken differently than the
 # per-unit search, so pre-existing entries are invalidated wholesale to keep
 # the "a hit is identical to a cold search" guarantee honest.
-CACHE_VERSION = 2
+# v3: fusion-aware planner — fused-group entries (keyed by group *content*:
+# member structures + edge wiring) join the store and singleton results can
+# now be composed against them, so the whole store is invalidated again.
+CACHE_VERSION = 3
 DEFAULT_ROOT = ".tcm_cache"
 
 _STATS_FIELDS = {f.name for f in dataclasses.fields(MapperStats)}
@@ -77,9 +81,29 @@ def mapping_from_wire(wire: list) -> Mapping:
     return tuple(nodes)
 
 
-def result_to_wire(result: MappingResult) -> dict:
+def fused_mapping_to_wire(fm: FusedMapping) -> dict:
     return {
-        "mapping": mapping_to_wire(result.mapping),
+        "members": [mapping_to_wire(m) for m in fm.members],
+        "pin_level": fm.pin_level,
+        "pinned": [[i, t] for i, t in fm.pinned],
+    }
+
+
+def fused_mapping_from_wire(wire: dict) -> FusedMapping:
+    return FusedMapping(
+        members=tuple(mapping_from_wire(m) for m in wire["members"]),
+        pin_level=int(wire["pin_level"]),
+        pinned=tuple((int(i), t) for i, t in wire["pinned"]),
+    )
+
+
+def result_to_wire(result: MappingResult) -> dict:
+    if isinstance(result.mapping, FusedMapping):
+        mapping = {"fused": fused_mapping_to_wire(result.mapping)}
+    else:
+        mapping = mapping_to_wire(result.mapping)
+    return {
+        "mapping": mapping,
         "energy": result.energy,
         "latency": result.latency,
         "edp": result.edp,
@@ -87,8 +111,13 @@ def result_to_wire(result: MappingResult) -> dict:
 
 
 def result_from_wire(wire: dict) -> MappingResult:
+    raw = wire["mapping"]
+    if isinstance(raw, dict):
+        mapping = fused_mapping_from_wire(raw["fused"])
+    else:
+        mapping = mapping_from_wire(raw)
     return MappingResult(
-        mapping=mapping_from_wire(wire["mapping"]),
+        mapping=mapping,
         energy=wire["energy"],
         latency=wire["latency"],
         edp=wire["edp"],
@@ -124,11 +153,34 @@ def compute_key(einsum: Einsum, arch: Arch, objective: str,
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
+def compute_group_key(workload: FusedWorkload, arch: Arch, objective: str,
+                      prune_partial: bool = True,
+                      version: Optional[int] = None) -> str:
+    """Content hash of a fusion group's joint-search inputs.
+
+    Keyed by group *content*: every member's structural identity (names
+    ignored, as for single einsums) plus the index-based edge wiring —
+    two layers whose (qk, av) pairs have identical shapes and identical
+    producer->consumer plumbing share one entry.
+    """
+    if version is None:
+        version = CACHE_VERSION
+    payload = repr((tuple(einsum_key(m) for m in workload.members),
+                    workload.edges, repr(arch), str(objective),
+                    bool(prune_partial), int(version)))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
 @dataclass
 class CacheHit:
-    """A deserialized cache entry: the optimum plus its search metadata."""
+    """A deserialized cache entry: the optimum plus its search metadata.
 
-    result: MappingResult
+    ``result`` is None for a *negative* fused-group entry — the group was
+    searched and admits no fused mapping (or none was retained); the
+    planner's fallback applies without re-running the joint search.
+    """
+
+    result: Optional[MappingResult]
     stats: MapperStats
     t_search: float  # wall seconds the original cold search took
 
@@ -216,6 +268,52 @@ class MappingCache:
             "t_search": float(t_search),
             "stats": stats_to_wire(stats) if stats is not None else {},
             **result_to_wire(result),
+        }
+        self._entries[key] = rec
+        self._append(rec)
+        return key
+
+    # -- fused groups ------------------------------------------------------
+
+    def get_group(self, workload: FusedWorkload, arch: Arch, objective: str,
+                  prune_partial: bool = True) -> Optional[CacheHit]:
+        """Fused-group lookup; a hit may carry ``result=None`` (the group
+        was searched before and admits no fused mapping)."""
+        key = compute_group_key(workload, arch, objective, prune_partial)
+        rec = self._entries.get(key)
+        if rec is None:
+            self.misses += 1
+            return None
+        try:
+            result = (None if rec["mapping"] is None
+                      else result_from_wire(rec))
+            hit = CacheHit(result=result,
+                           stats=stats_from_wire(rec.get("stats", {})),
+                           t_search=float(rec.get("t_search", 0.0)))
+        except (KeyError, IndexError, TypeError, ValueError):
+            del self._entries[key]
+            self.n_corrupt += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        return hit
+
+    def put_group(self, workload: FusedWorkload, arch: Arch, objective: str,
+                  result: Optional[MappingResult],
+                  stats: Optional[MapperStats] = None,
+                  t_search: float = 0.0, prune_partial: bool = True) -> str:
+        key = compute_group_key(workload, arch, objective, prune_partial)
+        rec = {
+            "v": CACHE_VERSION,
+            "key": key,
+            "group": workload.name,
+            "arch": arch.name,
+            "objective": str(objective),
+            "t_search": float(t_search),
+            "stats": stats_to_wire(stats) if stats is not None else {},
+            **(result_to_wire(result) if result is not None
+               else {"mapping": None, "energy": None, "latency": None,
+                     "edp": None}),
         }
         self._entries[key] = rec
         self._append(rec)

@@ -26,9 +26,10 @@ decoder layers carry self- plus cross-attention every step.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import Dict, List
 
-from repro.core.einsum import Einsum, batched_matmul, matmul
+from repro.core.einsum import (Einsum, EinsumGraph, TensorEdge,
+                               batched_matmul, matmul)
 from repro.models.config import ModelConfig
 
 
@@ -40,6 +41,23 @@ class LayerEinsum:
     op: str  # operator label ("q_proj", "qk", "ffn_up", "lm_head", ...)
     einsum: Einsum
     count: int = 1  # multiplicity within the layer (e.g. MoE experts)
+
+
+@dataclass
+class NetworkGraph:
+    """The workload-graph view of one forward pass: the execution-ordered
+    layer-op entries plus the producer->consumer tensor edges between their
+    einsums (keyed by einsum name)."""
+
+    entries: List[LayerEinsum]
+    graph: EinsumGraph
+
+    def entry(self, name: str) -> LayerEinsum:
+        return self._by_name[name]
+
+    def __post_init__(self):
+        self._by_name: Dict[str, LayerEinsum] = {
+            e.einsum.name: e for e in self.entries}
 
 
 def _ffn_einsums(cfg: ModelConfig, layer: int, prefix: str, tokens: int,
@@ -222,3 +240,96 @@ def extract_einsums(cfg: ModelConfig, mode: str = "prefill",
         -1, "lm_head",
         matmul(f"{cfg.name}.lm_head", tokens, cfg.d_model, cfg.vocab), 1))
     return out
+
+
+# --------------------------------------------------------------------------
+# Workload graph: producer -> consumer tensor edges per block type
+# --------------------------------------------------------------------------
+
+_RESHAPE = "per-head reshape between projection and attention"
+_RESIDUAL = "residual/norm boundary between blocks"
+
+
+def _block_edges(ops: Dict[str, LayerEinsum]) -> List[TensorEdge]:
+    """Edges among one layer's ops (``ops``: op label -> entry).
+
+    Emits the *real* dataflow of the cost-model einsums.  ``fusable`` marks
+    edges whose intermediate could legally live on-chip under joint
+    mapping; flows through per-head reshapes, token routing (MoE),
+    recurrences (RG-LRU / SSD scan state), residual/norm boundaries or
+    stage-cached encoder state are recorded but vetoed.
+    """
+    edges: List[TensorEdge] = []
+
+    def add(po: str, co: str, tensor: str, consumer_tensor: str,
+            fusable: bool = True, reason: str = "") -> None:
+        if po in ops and co in ops:
+            edges.append(TensorEdge(
+                ops[po].einsum.name, ops[co].einsum.name, tensor,
+                consumer_tensor, fusable, reason))
+
+    # attention: the score matrix (logits) flows straight from QK into AV —
+    # softmax is elementwise, so the producer/consumer co-tiling is legal
+    add("q_proj", "qk", "Z", "A", False, _RESHAPE)
+    add("k_proj", "qk", "Z", "B", False, _RESHAPE)
+    add("v_proj", "av", "Z", "B", False, _RESHAPE)
+    add("qk", "av", "Z", "A")
+    add("av", "o_proj", "Z", "A", False, _RESHAPE)
+
+    # cross-attention (decoder): scores attend *stage-cached* encoder
+    # states whose lifetime spans decode steps — never fusable
+    xstage = "cross-attention attends stage-cached encoder state"
+    add("xq_proj", "xqk", "Z", "A", False, _RESHAPE)
+    add("xk_proj", "xqk", "Z", "B", False, _RESHAPE)
+    add("xv_proj", "xav", "Z", "B", False, _RESHAPE)
+    add("xqk", "xav", "Z", "A", False, xstage)
+    add("xav", "xo_proj", "Z", "A", False, _RESHAPE)
+
+    # gated FFN: up and gate both feed down's contracted input (the gate is
+    # elementwise).  MoE expert instances route tokens dynamically, so the
+    # per-expert flows cannot be co-tiled from the cost-model view.
+    moe = "ffn_up" in ops and ops["ffn_up"].count > 1
+    routing = "MoE expert routing between FFN matmuls"
+    add("ffn_up", "ffn_down", "Z", "A", not moe, routing if moe else "")
+    add("ffn_gate", "ffn_down", "Z", "A", not moe, routing if moe else "")
+
+    # SSD (mamba2): intra-chunk score/context matmuls chain like attention;
+    # the projections are separated by the chunked-scan reshape
+    add("ssm_in_proj", "ssd_qk", "Z", "A", False,
+        "chunked-scan reshape between projection and SSD matmuls")
+    add("ssd_qk", "ssd_av", "Z", "A")
+    add("ssd_av", "ssm_out_proj", "Z", "A", False,
+        "chunked-scan reshape between SSD matmuls and projection")
+
+    # RG-LRU: the gated linear recurrence sits between the projections
+    add("rg_in_proj", "rg_out_proj", "Z", "A", False,
+        "RG-LRU recurrence between projections")
+
+    # block outputs feed the next matmul through residual adds and norms
+    for attn_out in ("o_proj", "ssm_out_proj", "rg_out_proj"):
+        for ffn_in in ("ffn_up", "ffn_gate"):
+            add(attn_out, ffn_in, "Z", "A", False, _RESIDUAL)
+    return edges
+
+
+def extract_graph(cfg: ModelConfig, mode: str = "prefill",
+                  batch: int = 1, seq: int = 1024) -> NetworkGraph:
+    """The workload graph of one forward pass: ``extract_einsums`` entries
+    plus producer->consumer tensor edges for every block type (dense/GQA
+    attention, gated/MoE FFN, SSD, RG-LRU, encoder-decoder cross-attention).
+
+    Edges are intra-layer: flows across layer boundaries pass through
+    residual adds and norms, which the einsum cost model does not carry, so
+    they are represented by the (never-fusable) residual-boundary edges
+    within each block.
+    """
+    entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
+    per_layer: Dict[int, Dict[str, LayerEinsum]] = {}
+    for e in entries:
+        # MoE repeats collapse to one entry per op; layer+op is unique
+        per_layer.setdefault(e.layer, {})[e.op] = e
+    edges: List[TensorEdge] = []
+    for layer in sorted(per_layer):
+        edges.extend(_block_edges(per_layer[layer]))
+    graph = EinsumGraph([e.einsum for e in entries], edges)
+    return NetworkGraph(entries=entries, graph=graph)

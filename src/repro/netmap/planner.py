@@ -28,13 +28,14 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.arch import Arch
-from repro.core.mapper import tcm_map
+from repro.core.fusion import from_group, workload_key
+from repro.core.mapper import tcm_map, tcm_map_group
 from repro.core.search import (MapperStats, MappingResult, SearchEngine,
                                einsum_key, make_engine)
 from repro.models.config import ModelConfig
 
 from .cache import MappingCache
-from .extract import LayerEinsum, extract_einsums
+from .extract import LayerEinsum, extract_einsums, extract_graph
 
 
 @dataclass
@@ -52,7 +53,12 @@ class UniqueSearch:
 
 @dataclass
 class LayerRow:
-    """One extracted layer op, costed with its unique search's optimum."""
+    """One extracted layer op, costed with its unique search's optimum.
+
+    For an adopted fusion group the member ops collapse into a single row
+    (``op`` = joined labels, ``fused`` = True) costed with the joint
+    optimum; the intermediate tensors then never touch DRAM.
+    """
 
     layer: int
     op: str
@@ -61,6 +67,41 @@ class LayerRow:
     latency: float  # s, scaled by count
     edp: float  # energy * latency of this row
     cached: bool
+    fused: bool = False
+
+
+@dataclass
+class FusionRow:
+    """One deduplicated fusion-group search: joint vs independent outcome."""
+
+    ops: str  # joined member op labels, e.g. "qk+av"
+    shape: str  # exemplar member shapes
+    n_instances: int  # how many group instances this search covers
+    unfused_energy: float  # independent-mapping sums (the fallback)
+    unfused_latency: float
+    result: Optional[MappingResult]  # joint optimum (None: no fused mapping)
+    stats: Optional[MapperStats]
+    adopted: bool  # fused won on both axes; rows use the joint optimum
+    cached: bool
+    t_search: float
+    pin_level: Optional[int] = None
+
+    @property
+    def unfused_edp(self) -> float:
+        return self.unfused_energy * self.unfused_latency
+
+    @property
+    def fused_edp(self) -> Optional[float]:
+        if self.result is None:
+            return None
+        return self.result.energy * self.result.latency
+
+    @property
+    def edp_delta(self) -> Optional[float]:
+        """unfused - fused group EDP (positive = fusion wins)."""
+        if self.result is None:
+            return None
+        return self.unfused_edp - self.fused_edp
 
 
 @dataclass
@@ -71,8 +112,10 @@ class NetworkReport:
     objective: str
     batch: int
     seq: int
+    fuse: bool = True
     rows: List[LayerRow] = field(default_factory=list)
     unique: List[UniqueSearch] = field(default_factory=list)
+    fused: List[FusionRow] = field(default_factory=list)
     total_energy: float = 0.0  # pJ
     total_latency: float = 0.0  # s
     total_edp: float = 0.0  # pJ*s = total_energy * total_latency
@@ -108,7 +151,8 @@ class NetworkReport:
                        "edp_pJs": self.total_edp},
             "layers": [{"layer": r.layer, "op": r.op, "count": r.count,
                         "energy_pJ": r.energy, "latency_s": r.latency,
-                        "edp_pJs": r.edp, "cached": r.cached}
+                        "edp_pJs": r.edp, "cached": r.cached,
+                        "fused": r.fused}
                        for r in self.rows],
             "unique_searches": [
                 {"op": u.op, "shape": u.shape, "n_uses": u.n_uses,
@@ -117,6 +161,20 @@ class NetworkReport:
                  "t_search_s": u.t_search,
                  "log10_mapspace": u.stats.log10_total}
                 for u in self.unique],
+            "fusion": [
+                {"ops": f.ops, "shape": f.shape,
+                 "n_instances": f.n_instances,
+                 "unfused_energy_pJ": f.unfused_energy,
+                 "unfused_latency_s": f.unfused_latency,
+                 "unfused_edp_pJs": f.unfused_edp,
+                 "fused_energy_pJ": (f.result.energy if f.result else None),
+                 "fused_latency_s": (f.result.latency if f.result else None),
+                 "fused_edp_pJs": f.fused_edp,
+                 "edp_delta_pJs": f.edp_delta,
+                 "pin_level": f.pin_level,
+                 "adopted": f.adopted, "cached": f.cached,
+                 "t_search_s": f.t_search}
+                for f in self.fused],
             "mapspace": {"log10_joint": self.log10_mapspace,
                          "n_evaluated": self.n_evaluated},
             "cache": {"hits": self.cache_hits, "misses": self.cache_misses,
@@ -145,6 +203,20 @@ class NetworkReport:
                 f"    {u.op:<14} {u.shape:<28} {u.n_uses:>4} "
                 f"{u.result.energy:>12.4g} {u.result.latency:>12.4g} "
                 f"{u.result.edp:>12.4g} {'cache' if u.cached else 'search':>6}")
+        if self.fused:
+            out += ["", "  fusion groups (joint vs independent mapping):",
+                    f"    {'ops':<18} {'inst':>4} {'pin':>4} "
+                    f"{'fused EDP':>12} {'unfused EDP':>12} {'delta':>10} "
+                    f"{'adopted':>8}"]
+            for f in self.fused:
+                fe = f"{f.fused_edp:.4g}" if f.fused_edp is not None else "-"
+                de = (f"{f.edp_delta:+.3g}" if f.edp_delta is not None
+                      else "-")
+                pin = str(f.pin_level) if f.pin_level is not None else "-"
+                out.append(
+                    f"    {f.ops:<18} {f.n_instances:>4} {pin:>4} "
+                    f"{fe:>12} {f.unfused_edp:>12.4g} {de:>10} "
+                    f"{'yes' if f.adopted else 'no':>8}")
         out += ["", "  per-layer totals:",
                 f"    {'layer':<7} {'energy(pJ)':>12} {'latency(s)':>12} "
                 f"{'EDP(pJ*s)':>12}"]
@@ -181,6 +253,8 @@ def map_network(
     engine: Optional[SearchEngine] = None,
     workers: Optional[int] = None,
     share_incumbents: bool = True,
+    fuse: bool = True,
+    max_group: int = 3,
     verbose: bool = False,
 ) -> NetworkReport:
     """Map every layer of ``cfg`` on ``arch`` and compose the network report.
@@ -192,9 +266,24 @@ def map_network(
     per-einsum search inherits the engine's two-phase shared-incumbent
     branch-and-bound (``share_incumbents=False`` opts back out; optima are
     value-identical either way, it only changes search time).
+
+    ``fuse=True`` (default) additionally partitions the workload graph into
+    fusion groups (legality: single consumer edge, matching rank classes, an
+    on-chip pin level), joint-searches each deduplicated group with the
+    intermediate pinned on-chip, and *adopts* the joint optimum only when it
+    is no worse than the independent sum on both energy and latency (and
+    strictly better on one) — so network totals with fusion are never worse
+    than the per-einsum baseline, and per-group fused-vs-unfused EDP deltas
+    are reported either way.  ``fuse=False`` reproduces the independent
+    per-layer planner bit-for-bit, stats included.
     """
     t0 = time.perf_counter()
-    entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
+    if fuse:
+        ng = extract_graph(cfg, mode=mode, batch=batch, seq=seq)
+        entries = ng.entries
+    else:
+        ng = None
+        entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(None, workers,
@@ -215,8 +304,11 @@ def map_network(
         groups[key].append(entry)
 
     report = NetworkReport(config=cfg.name, arch=arch.name, mode=mode,
-                           objective=objective, batch=batch, seq=seq)
+                           objective=objective, batch=batch, seq=seq,
+                           fuse=fuse)
     searched: Dict[tuple, UniqueSearch] = {}
+    # member einsum name -> (first-member name, FusionRow) for adopted groups
+    adopted_member: Dict[str, Tuple[str, FusionRow]] = {}
     try:
         for key in order:
             members = groups[key]
@@ -257,6 +349,11 @@ def map_network(
                 src = "cache" if cached else f"search {t_search:.2f}s"
                 print(f"  {exemplar.op:<14} {u.shape:<28} [{src}] "
                       f"edp={result.edp:.4g}")
+
+        if fuse:
+            _map_fusion_groups(ng, arch, objective, prune_partial, cache,
+                               engine, max_group, searched, report,
+                               adopted_member, verbose)
     finally:
         # engines we created are torn down even when a search raises;
         # caller-provided engines stay open for reuse
@@ -264,6 +361,20 @@ def map_network(
             engine.close()
 
     for entry in entries:
+        name = entry.einsum.name
+        if name in adopted_member:
+            first, frow = adopted_member[name]
+            if name != first:
+                continue  # folded into the group's first-member row
+            ops = frow.ops
+            report.rows.append(LayerRow(
+                layer=entry.layer, op=ops, count=1,
+                energy=frow.result.energy, latency=frow.result.latency,
+                edp=frow.result.energy * frow.result.latency,
+                cached=frow.cached, fused=True))
+            report.total_energy += frow.result.energy
+            report.total_latency += frow.result.latency
+            continue
         u = searched[einsum_key(entry.einsum)]
         energy = u.result.energy * entry.count
         latency = u.result.latency * entry.count
@@ -279,9 +390,87 @@ def map_network(
         report.cache_hits = cache.hits - hits0
         report.cache_misses = cache.misses - misses0
     else:
-        report.cache_misses = len(report.unique)
+        report.cache_misses = len(report.unique) + len(report.fused)
     report.t_total = time.perf_counter() - t0
     return report
+
+
+def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
+                       max_group, searched, report, adopted_member,
+                       verbose) -> None:
+    """Joint-search the workload graph's fusion groups.
+
+    Each structurally distinct group is searched once (dedup by member
+    structures + edge wiring); the independent per-member optima — already
+    searched above — both seed the joint branch-and-bound (candidates
+    provably no better than the fallback are pruned) and decide adoption.
+    """
+    fgroups = [g for g in
+               ng.graph.partition_fusion_groups(arch, max_group=max_group)
+               if g.is_fused]
+    rows_by_key: Dict[tuple, FusionRow] = {}
+    for g in fgroups:
+        m_entries = [ng.entry(n) for n in g.members]
+        if any(e.count != 1 for e in m_entries):
+            continue  # replicated ops (MoE experts) never co-tile
+        w = from_group(ng.graph, g,
+                       name="+".join(e.op for e in m_entries))
+        gkey = workload_key(w)
+        row = rows_by_key.get(gkey)
+        if row is not None:
+            row.n_instances += 1
+        else:
+            ind_e = sum(searched[einsum_key(e.einsum)].result.energy
+                        for e in m_entries)
+            ind_l = sum(searched[einsum_key(e.einsum)].result.latency
+                        for e in m_entries)
+            bound = {"edp": ind_e * ind_l, "energy": ind_e,
+                     "latency": ind_l}[objective]
+            hit = (cache.get_group(w, arch, objective, prune_partial)
+                   if cache is not None else None)
+            if hit is not None:
+                result, stats, cached, t_search = (hit.result, hit.stats,
+                                                   True, hit.t_search)
+            else:
+                t1 = time.perf_counter()
+                result, stats = tcm_map_group(
+                    w, arch, objective=objective,
+                    prune_partial=prune_partial, engine=engine,
+                    inc_obj=bound)
+                t_search = time.perf_counter() - t1
+                report.t_search += t_search
+                cached = False
+                if cache is not None:
+                    cache.put_group(w, arch, objective, result, stats,
+                                    t_search, prune_partial)
+            adopted = (result is not None
+                       and result.energy <= ind_e
+                       and result.latency <= ind_l
+                       and (result.energy < ind_e
+                            or result.latency < ind_l))
+            row = FusionRow(
+                ops=w.name,
+                shape=" & ".join(_shape_desc(e) for e in m_entries),
+                n_instances=1, unfused_energy=ind_e, unfused_latency=ind_l,
+                result=result, stats=stats, adopted=adopted, cached=cached,
+                t_search=t_search,
+                pin_level=(result.mapping.pin_level
+                           if result is not None else None))
+            rows_by_key[gkey] = row
+            report.fused.append(row)
+            if stats is not None:
+                report.n_evaluated += stats.n_expanded
+            if verbose:
+                src = "cache" if cached else f"search {t_search:.2f}s"
+                fe = (f"{row.fused_edp:.4g}" if row.fused_edp is not None
+                      else "-")
+                print(f"  [fuse] {w.name:<18} [{src}] fused_edp={fe} "
+                      f"unfused_edp={row.unfused_edp:.4g} "
+                      f"adopted={row.adopted}")
+        if row.adopted:
+            first = g.members[0]
+            for n in g.members:
+                adopted_member[n] = (first, row)
 
 
 # --------------------------------------------------------------------------

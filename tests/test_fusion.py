@@ -1,0 +1,230 @@
+"""Fused-group joint mapping: IR, enumeration, model, search, parity."""
+import pytest
+
+from repro.core.dataplacement import enumerate_pinned_dataplacements
+from repro.core.einsum import (EinsumGraph, TensorEdge, batched_matmul,
+                               matmul)
+from repro.core.fusion import (FusedWorkload, GroupEdge,
+                               enumerate_fused_skeletons, from_group,
+                               pin_levels, pinned_roles, shared_classes,
+                               validate_fused, workload_from_key,
+                               workload_key)
+from repro.core.looptree import Storage
+from repro.core.mapper import tcm_map, tcm_map_group
+from repro.core.presets import nvdla_like, tpu_v4i_like
+from repro.core.search import ProcessPoolEngine, SerialEngine
+
+NVDLA = nvdla_like(tensors=("A", "B", "Z"))
+TPU = tpu_v4i_like()
+
+
+def _attention_pair():
+    qk = batched_matmul("qk", 8, 4, 32, 64)
+    av = batched_matmul("av", 8, 4, 64, 32)
+    return FusedWorkload("qk+av", (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+
+
+def _ffn_triple():
+    up = matmul("up", 4, 64, 128)
+    gate = matmul("gate", 4, 64, 128)
+    down = matmul("down", 4, 128, 64)
+    return FusedWorkload(
+        "up+gate+down", (up, gate, down),
+        (GroupEdge(0, 2, "Z", "A"), GroupEdge(1, 2, "Z", "A")))
+
+
+# --------------------------------------------------------------------------
+# graph IR
+# --------------------------------------------------------------------------
+
+
+def test_einsum_graph_legality():
+    qk = batched_matmul("qk", 8, 4, 32, 64)
+    av = batched_matmul("av", 8, 4, 64, 32)
+    g = EinsumGraph([qk, av], [TensorEdge("qk", "av", "Z", "A")])
+    e = g.edges[0]
+    assert g.edge_fusable(e, NVDLA)
+    # extent mismatch kills the correspondence
+    av_bad = batched_matmul("av2", 8, 4, 32, 32)  # k=32 != producer n=64
+    g2 = EinsumGraph([qk, av_bad], [TensorEdge("qk", "av2", "Z", "A")])
+    assert not g2.edge_fusable(g2.edges[0], NVDLA)
+    # extractor veto wins over structure
+    g3 = EinsumGraph([qk, av], [TensorEdge("qk", "av", "Z", "A",
+                                           fusable=False, reason="routing")])
+    assert not g3.edge_fusable(g3.edges[0], NVDLA)
+
+
+def test_multi_consumer_intermediate_not_fusable():
+    p = matmul("p", 4, 8, 16)
+    c1 = matmul("c1", 4, 16, 8)
+    c2 = matmul("c2", 4, 16, 8)
+    g = EinsumGraph([p, c1, c2], [TensorEdge("p", "c1", "Z", "A"),
+                                  TensorEdge("p", "c2", "Z", "A")])
+    assert not g.edge_fusable(g.edges[0], NVDLA)
+    groups = g.partition_fusion_groups(NVDLA)
+    assert all(not grp.is_fused for grp in groups)
+
+
+def test_shared_classes_and_roles():
+    w = _attention_pair()
+    assert shared_classes(w) == (((0, "h"), (1, "h")),
+                                 ((0, "m"), (1, "m")),
+                                 ((0, "n"), (1, "k")))
+    assert pinned_roles(w) == (("Z",), ("A",))
+    t = _ffn_triple()
+    # up.n and gate.n both tie to down.k -> one merged class
+    assert ((0, "n"), (1, "n"), (2, "k")) in shared_classes(t)
+    assert pin_levels(w, TPU) == [1]  # GLB only: LB sits below a fanout
+
+
+def test_workload_key_roundtrip():
+    w = _attention_pair()
+    key = workload_key(w)
+    w2 = workload_from_key(key)
+    assert workload_key(w2) == key
+    assert shared_classes(w2) == shared_classes(w)
+
+
+# --------------------------------------------------------------------------
+# pinned enumeration
+# --------------------------------------------------------------------------
+
+
+def test_pinned_dataplacements_never_back_pinned_tensor_at_dram():
+    e = batched_matmul("qk", 8, 4, 32, 64)
+    for dp, nb in enumerate_pinned_dataplacements(e, TPU, {"Z": 1}):
+        assert not any(s.level == 0 and s.tensor == "Z" for s in dp)
+        # backing region = level-0 nodes then the pin node
+        assert dp[nb - 1] == Storage(1, "Z")
+        assert all(s.level == 0 for s in dp[:nb - 1])
+        # deeper Z nodes only below the pin
+        levels = [s.level for s in dp if s.tensor == "Z"]
+        assert levels == sorted(levels) and levels[0] == 1
+
+
+def test_enumerate_fused_skeletons_nonempty_and_bounded():
+    w = _attention_pair()
+    sks = enumerate_fused_skeletons(w, NVDLA)
+    assert sks
+    assert all(sk.pin_level >= 1 for sk in sks)
+    # the cap returns [] (caller falls back), never a silent truncation
+    assert enumerate_fused_skeletons(w, NVDLA, max_units=1) == []
+
+
+# --------------------------------------------------------------------------
+# joint search
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", [NVDLA, TPU], ids=["nvdla", "tpu"])
+def test_fused_beats_independent_and_stays_off_dram(arch):
+    w = _attention_pair()
+    best, stats = tcm_map_group(w, arch)
+    assert best is not None
+    bq, _ = tcm_map(w.members[0], arch)
+    ba, _ = tcm_map(w.members[1], arch)
+    ind_e, ind_l = bq.energy + ba.energy, bq.latency + ba.latency
+    # the logits tensor never touches DRAM and fusion wins on both axes
+    assert best.energy < ind_e
+    assert best.latency <= ind_l
+    assert best.edp < ind_e * ind_l
+    fm = best.mapping
+    validate_fused(w, arch, fm)
+    for i, mapping in enumerate(fm.members):
+        for n in mapping:
+            if isinstance(n, Storage) and (i, n.tensor) in fm.pinned:
+                assert n.level >= fm.pin_level > 0
+
+
+def test_fused_triple_with_tied_members():
+    w = _ffn_triple()
+    best, stats = tcm_map_group(w, NVDLA)
+    assert best is not None
+    validate_fused(w, NVDLA, best.mapping)
+    # structurally identical up/gate members adopt identical sub-mappings
+    assert best.mapping.members[0] == best.mapping.members[1]
+    ind = [tcm_map(m, NVDLA)[0] for m in w.members]
+    assert best.energy < sum(r.energy for r in ind)
+
+
+def test_fused_serial_and_pool_value_identical():
+    w = _attention_pair()
+    serial, _ = tcm_map_group(w, NVDLA, engine=SerialEngine())
+    pool_engine = ProcessPoolEngine(workers=2)
+    try:
+        pooled, _ = tcm_map_group(w, NVDLA, engine=pool_engine)
+    finally:
+        pool_engine.close()
+    assert serial is not None and pooled is not None
+    assert (serial.energy, serial.latency, serial.edp) == (
+        pooled.energy, pooled.latency, pooled.edp)
+
+
+def test_external_bound_preserves_winning_optimum():
+    w = _attention_pair()
+    free, _ = tcm_map_group(w, NVDLA)
+    bq, _ = tcm_map(w.members[0], NVDLA)
+    ba, _ = tcm_map(w.members[1], NVDLA)
+    bound = (bq.energy + ba.energy) * (bq.latency + ba.latency)
+    assert free.edp < bound  # fusion wins here, so the bound is loose
+    bounded, _ = tcm_map_group(w, NVDLA, inc_obj=bound)
+    assert (bounded.energy, bounded.latency, bounded.edp) == (
+        free.energy, free.latency, free.edp)
+
+
+def test_fused_prefix_cotiling_is_consistent():
+    w = _attention_pair()
+    best, _ = tcm_map_group(w, NVDLA)
+    fm = best.mapping
+    # the shared prefix loops carry identical bounds in both members
+    from repro.core.looptree import Loop
+
+    def prefix_bounds(mapping, pinned_tensors):
+        out = []
+        for n in mapping:
+            if isinstance(n, Storage) and n.tensor in pinned_tensors:
+                break
+            if isinstance(n, Loop):
+                out.append(n.bound)
+        return out
+
+    b0 = prefix_bounds(fm.members[0], {t for i, t in fm.pinned if i == 0})
+    b1 = prefix_bounds(fm.members[1], {t for i, t in fm.pinned if i == 1})
+    assert b0 == b1 and len(b0) == len(shared_classes(w))
+
+
+def test_graph_to_group_to_search_roundtrip():
+    qk = batched_matmul("L0.qk", 8, 4, 32, 64)
+    av = batched_matmul("L0.av", 8, 4, 64, 32)
+    g = EinsumGraph([qk, av], [TensorEdge("L0.qk", "L0.av", "Z", "A")])
+    grp = [x for x in g.partition_fusion_groups(NVDLA) if x.is_fused]
+    assert len(grp) == 1
+    w = from_group(g, grp[0])
+    best, _ = tcm_map_group(w, NVDLA)
+    assert best is not None
+
+
+# --------------------------------------------------------------------------
+# search-cache hygiene (bounded memos, close() hook)
+# --------------------------------------------------------------------------
+
+
+def test_search_caches_are_bounded_and_reset_on_close():
+    e = matmul("probe", 8, 16, 4)
+    best, _ = tcm_map(e, NVDLA)  # owns its engine; close() clears
+    assert best is not None
+    from repro.core import search as search_mod
+
+    assert search_mod._einsum_from_key.cache_info().maxsize == 4096
+    # tcm_map tore its engine down -> memos are empty again
+    assert search_mod._einsum_from_key.cache_info().currsize == 0
+    assert search_mod._curried_cached.cache_info().currsize == 0
+    assert search_mod._dataplacements_cached.cache_info().currsize == 0
+
+    # a long-lived engine keeps memos warm until close()
+    engine = SerialEngine()
+    tcm_map(e, NVDLA, engine=engine)
+    assert search_mod._curried_cached.cache_info().currsize > 0
+    engine.close()
+    assert search_mod._curried_cached.cache_info().currsize == 0
+    assert search_mod._fused_curried_cached.cache_info().currsize == 0

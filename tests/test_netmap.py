@@ -1,15 +1,27 @@
-"""Network mapping pipeline: extraction, dedup, planner, CLI, kernel hook."""
+"""Network mapping pipeline: extraction, graph edges, fusion-aware planner,
+dedup, CLI, kernel hook."""
 import json
 
 import pytest
 
 from repro.configs import get_config
+from repro.core.mapper import tcm_map
 from repro.core.presets import nvdla_like
 from repro.core.search import einsum_key
-from repro.netmap import MappingCache, extract_einsums, map_network
+from repro.netmap import (MappingCache, extract_einsums, extract_graph,
+                          map_network)
 from repro.netmap.__main__ import main as netmap_main
 
-ARCH = nvdla_like(tensors=("A", "B", "Z"))  # matmul tensor names
+ARCH = nvdla_like(tensors=("A", "B", "Z"))
+
+
+def _edge(graph, producer_op, consumer_op, layer_tag):
+    """The edge between two ops of one layer (None if absent)."""
+    for e in graph.edges:
+        if e.producer.endswith(f"{layer_tag}.{producer_op}") and \
+                e.consumer.endswith(f"{layer_tag}.{consumer_op}"):
+            return e
+    return None  # matmul tensor names
 
 
 # --------------------------------------------------------------------------
@@ -97,6 +109,78 @@ def test_extract_encdec():
     assert "xk_proj" not in dec_ops and "xqk" in dec_ops
 
 
+# --------------------------------------------------------------------------
+# workload graph edges
+# --------------------------------------------------------------------------
+
+
+def test_graph_edges_dense_attention_and_ffn():
+    ng = extract_graph(get_config("qwen1_5_0_5b"), mode="prefill", batch=1,
+                       seq=256)
+    g = ng.graph
+    qk_av = _edge(g, "qk", "av", "L0")
+    assert qk_av is not None and qk_av.fusable
+    assert g.edge_fusable(qk_av, ARCH)
+    # the gated-FFN chain: up -> down and gate -> down, both fusable
+    for producer in ("ffn_up", "ffn_gate"):
+        e = _edge(g, producer, "ffn_down", "L0")
+        assert e is not None and e.fusable and g.edge_fusable(e, ARCH)
+    # reshape boundaries are recorded but vetoed
+    e = _edge(g, "q_proj", "qk", "L0")
+    assert e is not None and not e.fusable and "reshape" in e.reason
+
+
+def test_graph_edges_moe_routing_not_fusable():
+    ng = extract_graph(get_config("phi3_5_moe_42b"), mode="prefill",
+                       batch=1, seq=128)
+    g = ng.graph
+    for producer in ("ffn_up", "ffn_gate"):
+        e = _edge(g, producer, "ffn_down", "L0")
+        assert e is not None and not e.fusable
+        assert "routing" in e.reason
+        assert not g.edge_fusable(e, ARCH)
+    # MoE attention still fuses QK->AV
+    e = _edge(g, "qk", "av", "L0")
+    assert e is not None and g.edge_fusable(e, ARCH)
+
+
+def test_graph_edges_encdec_cross_attention_not_fusable():
+    ng = extract_graph(get_config("seamless_m4t_medium"), mode="decode",
+                       batch=1, seq=64)
+    g = ng.graph
+    e = _edge(g, "xqk", "xav", "dec0")
+    assert e is not None and not e.fusable
+    assert "encoder" in e.reason
+    assert not g.edge_fusable(e, ARCH)
+    # decoder self-attention fuses as usual
+    e = _edge(g, "qk", "av", "dec0")
+    assert e is not None and g.edge_fusable(e, ARCH)
+
+
+def test_graph_edges_ssm_and_rglru():
+    g = extract_graph(get_config("mamba2_130m"), mode="prefill", batch=1,
+                      seq=512).graph
+    e = _edge(g, "ssd_qk", "ssd_av", "L0")
+    assert e is not None and e.fusable
+    g = extract_graph(get_config("recurrentgemma_2b", smoke=True),
+                      mode="prefill", batch=1, seq=128).graph
+    e = _edge(g, "rg_in_proj", "rg_out_proj", "L0")
+    assert e is not None and not e.fusable and "recurrence" in e.reason
+
+
+def test_graph_partition_covers_every_node():
+    ng = extract_graph(get_config("qwen1_5_0_5b", smoke=True),
+                       mode="decode", batch=2, seq=32)
+    groups = ng.graph.partition_fusion_groups(ARCH)
+    names = [n for grp in groups for n in grp.members]
+    assert sorted(names) == sorted(n.name for n in ng.graph.nodes)
+    fused = [grp for grp in groups if grp.is_fused]
+    labels = {"+".join(ng.entry(n).op for n in grp.members)
+              for grp in fused}
+    assert "qk+av" in labels
+    assert "ffn_up+ffn_gate+ffn_down" in labels
+
+
 def test_extract_rejects_bad_args():
     cfg = get_config("qwen1_5_0_5b", smoke=True)
     with pytest.raises(ValueError):
@@ -117,10 +201,10 @@ def _smoke_report(cache=None, **kw):
 
 
 def test_map_network_totals_consistent():
-    rep = _smoke_report()
-    assert len(rep.rows) == len(extract_einsums(
-        get_config("qwen1_5_0_5b", smoke=True), mode="decode", batch=2,
-        seq=32))
+    entries = extract_einsums(get_config("qwen1_5_0_5b", smoke=True),
+                              mode="decode", batch=2, seq=32)
+    rep = _smoke_report(fuse=False)
+    assert len(rep.rows) == len(entries)
     assert len(rep.unique) < len(rep.rows)
     assert rep.total_energy == pytest.approx(sum(r.energy for r in rep.rows))
     assert rep.total_latency == pytest.approx(
@@ -130,6 +214,19 @@ def test_map_network_totals_consistent():
     # per-layer totals cover every layer plus the LM head (-1)
     layers = [layer for layer, *_ in rep.layer_totals()]
     assert layers == sorted(set(r.layer for r in rep.rows))
+
+    # with fusion, adopted groups fold member ops into one row each but the
+    # totals stay internally consistent and never exceed the baseline
+    fused = _smoke_report()
+    folded = sum((f.n_instances * (len(f.ops.split("+")) - 1))
+                 for f in fused.fused if f.adopted)
+    assert len(fused.rows) == len(entries) - folded
+    assert fused.total_energy == pytest.approx(
+        sum(r.energy for r in fused.rows))
+    assert fused.total_latency == pytest.approx(
+        sum(r.latency for r in fused.rows))
+    assert fused.total_energy <= rep.total_energy
+    assert fused.total_latency <= rep.total_latency
 
 
 def test_map_network_report_serializes():
@@ -144,11 +241,12 @@ def test_map_network_report_serializes():
 def test_map_network_cache_roundtrip_identical(tmp_path):
     cold = _smoke_report(cache=MappingCache(root=tmp_path))
     assert cold.cache_hits == 0
-    assert cold.cache_misses == len(cold.unique)
+    # fusion-group searches miss (and persist) alongside the singletons
+    assert cold.cache_misses == len(cold.unique) + len(cold.fused)
 
     warm = _smoke_report(cache=MappingCache(root=tmp_path))  # re-read disk
     assert warm.cache_misses == 0
-    assert warm.cache_hits == len(warm.unique)
+    assert warm.cache_hits == len(warm.unique) + len(warm.fused)
     assert warm.cache_hit_rate == 1.0
     # bit-identical composition from cached mappings
     assert warm.total_energy == cold.total_energy
@@ -157,15 +255,88 @@ def test_map_network_cache_roundtrip_identical(tmp_path):
     for u_cold, u_warm in zip(cold.unique, warm.unique):
         assert u_warm.result == u_cold.result
         assert u_warm.cached and not u_cold.cached
+    for f_cold, f_warm in zip(cold.fused, warm.fused):
+        assert f_warm.result == f_cold.result
+        assert f_warm.adopted == f_cold.adopted
+        assert f_warm.cached and not f_cold.cached
 
 
 def test_map_network_reused_cache_reports_per_call_deltas(tmp_path):
     cache = MappingCache(root=tmp_path)
     cold = _smoke_report(cache=cache)
     warm = _smoke_report(cache=cache)  # same instance, all hits
-    assert cold.cache_hits == 0 and cold.cache_misses == len(cold.unique)
-    assert warm.cache_hits == len(warm.unique) and warm.cache_misses == 0
+    n_cold = len(cold.unique) + len(cold.fused)
+    assert cold.cache_hits == 0 and cold.cache_misses == n_cold
+    assert warm.cache_hits == n_cold and warm.cache_misses == 0
     assert warm.cache_hit_rate == 1.0
+
+
+def test_no_fuse_reproduces_per_einsum_composition_bit_for_bit():
+    """fuse=False is the independent per-layer planner of old: every row
+    and total must equal the manual per-einsum tcm_map composition exactly,
+    search stats included."""
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    rep = map_network(cfg, ARCH, mode="decode", batch=2, seq=32, fuse=False)
+    assert rep.fused == []
+
+    entries = extract_einsums(cfg, mode="decode", batch=2, seq=32)
+    ref = {}
+    for e in entries:
+        key = einsum_key(e.einsum)
+        if key not in ref:
+            ref[key] = tcm_map(e.einsum, ARCH, objective="edp")
+    assert len(ref) == len(rep.unique)
+    for u, key in zip(rep.unique, ref):
+        best, stats = ref[key]
+        assert u.result.mapping == best.mapping
+        assert (u.result.energy, u.result.latency, u.result.edp) == (
+            best.energy, best.latency, best.edp)
+        # exact stats parity (counters; timings are wall-clock)
+        for f in ("n_dataplacements", "n_skeletons", "n_final_evals",
+                  "n_expanded", "n_pruned_dominated", "n_pruned_invalid",
+                  "n_pruned_bound", "log10_total", "log10_evaluated"):
+            assert getattr(u.stats, f) == getattr(stats, f), f
+
+    total_e = total_l = 0.0
+    for e in entries:
+        best, _ = ref[einsum_key(e.einsum)]
+        total_e += best.energy * e.count
+        total_l += best.latency * e.count
+    assert rep.total_energy == total_e
+    assert rep.total_latency == total_l
+    assert rep.total_edp == total_e * total_l
+
+
+def test_fused_planner_beats_or_matches_baseline():
+    fused = _smoke_report()
+    baseline = _smoke_report(fuse=False)
+    assert fused.total_energy <= baseline.total_energy
+    assert fused.total_latency <= baseline.total_latency
+    # fusion keeps the attention logits + FFN activations off DRAM here, so
+    # the network EDP is *strictly* below the independent-mapping baseline
+    assert fused.total_edp < baseline.total_edp
+    # qwen smoke fuses qk+av and the FFN chain; at least one group adopts
+    # and improves EDP strictly
+    adopted = [f for f in fused.fused if f.adopted]
+    assert adopted and any(f.edp_delta > 0 for f in adopted)
+    # adopted groups report a real pin level and a fused row in the table
+    for f in adopted:
+        assert f.pin_level is not None and f.pin_level >= 1
+    assert any(r.fused for r in fused.rows)
+
+
+def test_fused_rows_keep_intermediates_off_dram():
+    from repro.core.looptree import Storage
+
+    rep = _smoke_report()
+    for f in rep.fused:
+        if f.result is None:
+            continue
+        fm = f.result.mapping
+        for i, mapping in enumerate(fm.members):
+            for n in mapping:
+                if isinstance(n, Storage) and (i, n.tensor) in fm.pinned:
+                    assert n.level >= fm.pin_level > 0
 
 
 # --------------------------------------------------------------------------

@@ -125,3 +125,59 @@ def test_compute_key_is_stable_and_content_addressed():
     assert k1 == k2  # structural identity, name ignored
     assert compute_key(EINSUM, ARCH, "energy") != k1
     assert len(k1) == 64  # sha256 hex
+
+
+# --------------------------------------------------------------------------
+# fused-group entries
+# --------------------------------------------------------------------------
+
+
+def _group():
+    from repro.core.einsum import batched_matmul
+    from repro.core.fusion import FusedWorkload, GroupEdge
+
+    qk = batched_matmul("qk", 8, 4, 32, 64)
+    av = batched_matmul("av", 8, 4, 64, 32)
+    return FusedWorkload("qk+av", (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+
+
+def test_group_roundtrip_identical(tmp_path):
+    from repro.core.fusion import FusedMapping, validate_fused
+    from repro.core.mapper import tcm_map_group
+    from repro.netmap.cache import compute_group_key
+
+    w = _group()
+    best, stats = tcm_map_group(w, ARCH)
+    assert best is not None
+    MappingCache(root=tmp_path).put_group(w, ARCH, "edp", best, stats,
+                                          t_search=2.5)
+    hit = MappingCache(root=tmp_path).get_group(w, ARCH, "edp")
+    assert hit is not None and hit.t_search == 2.5
+    assert isinstance(hit.result.mapping, FusedMapping)
+    assert hit.result == best
+    assert hit.result.mapping == best.mapping
+    validate_fused(w, ARCH, hit.result.mapping)
+    # group keys are content-addressed: member names ignored, wiring counted
+    k = compute_group_key(w, ARCH, "edp")
+    from repro.core.einsum import batched_matmul
+    from repro.core.fusion import FusedWorkload, GroupEdge
+
+    renamed = FusedWorkload(
+        "other", (batched_matmul("x", 8, 4, 32, 64),
+                  batched_matmul("y", 8, 4, 64, 32)),
+        (GroupEdge(0, 1, "Z", "A"),))
+    assert compute_group_key(renamed, ARCH, "edp") == k
+    reshaped = FusedWorkload(
+        "other", (batched_matmul("x", 8, 4, 16, 64),
+                  batched_matmul("y", 8, 4, 64, 32)),
+        (GroupEdge(0, 1, "Z", "A"),))
+    assert compute_group_key(reshaped, ARCH, "edp") != k
+
+
+def test_group_negative_entry_roundtrip(tmp_path):
+    w = _group()
+    cache = MappingCache(root=tmp_path)
+    cache.put_group(w, ARCH, "edp", None, None, t_search=0.7)
+    hit = MappingCache(root=tmp_path).get_group(w, ARCH, "edp")
+    assert hit is not None and hit.result is None
+    assert hit.t_search == 0.7
