@@ -64,6 +64,30 @@ def main(argv) -> int:
                 f"{flimit_n:.0f} (reference "
                 f"{ref['fused_qkav_n_expanded']}) — prune power lost")
 
+    # DSE sweep (fig9 fast row): wall time + deterministic serial node
+    # count + pruned-point floor (losing outer-loop prune power is the
+    # regression wall-time noise cannot excuse)
+    dlimit_s = dlimit_n = None
+    if "dse_sweep_s" in ref and "dse_sweep_s" in perf:
+        dlimit_s = ref["dse_sweep_s"] * ref["max_time_regression"]
+        if perf["dse_sweep_s"] > dlimit_s:
+            failures.append(
+                f"DSE sweep took {perf['dse_sweep_s']}s > {dlimit_s}s "
+                f"(reference {ref['dse_sweep_s']}s x "
+                f"{ref['max_time_regression']})")
+        dlimit_n = (ref["dse_n_expanded"]
+                    * ref["max_n_expanded_regression"])
+        if perf["dse_n_expanded"] > dlimit_n:
+            failures.append(
+                f"DSE sweep n_expanded {perf['dse_n_expanded']} > "
+                f"{dlimit_n:.0f} (reference {ref['dse_n_expanded']}) — "
+                f"prune power lost")
+        if perf.get("dse_points_pruned", 0) < ref["dse_min_points_pruned"]:
+            failures.append(
+                f"DSE sweep pruned only {perf.get('dse_points_pruned', 0)} "
+                f"arch points < {ref['dse_min_points_pruned']} — outer-loop "
+                f"pruning stopped working")
+
     for line in failures:
         print(f"PERF REGRESSION: {line}")
     if not failures:
@@ -74,6 +98,11 @@ def main(argv) -> int:
             msg += (f"; fused QK+AV {perf['fused_qkav_s']}s "
                     f"(limit {flimit_s}s), n_expanded "
                     f"{perf['fused_qkav_n_expanded']} (limit {flimit_n:.0f})")
+        if dlimit_s is not None:
+            msg += (f"; DSE sweep {perf['dse_sweep_s']}s "
+                    f"(limit {dlimit_s}s), n_expanded "
+                    f"{perf['dse_n_expanded']} (limit {dlimit_n:.0f}), "
+                    f"{perf.get('dse_points_pruned', 0)} points pruned")
         print(msg)
     return 1 if failures else 0
 

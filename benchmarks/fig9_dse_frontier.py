@@ -1,0 +1,116 @@
+"""Fig 9 (repo extension): architecture DSE frontier over the smoke
+attention pair.
+
+Sweeps the 16-point ``edge`` design space (buffer capacity x MAC-array
+shape under a PE budget) against the smoke attention pair and measures the
+three sweep regimes the PR-5 explorer enables:
+
+  * ``exhaustive``   — per-point optimal mapping, no outer-loop pruning
+                       (the baseline an un-turbocharged DSE would pay);
+  * ``pruned``       — roofline ordering + dominance pruning + cross-point
+                       incumbent seeding, cold cache;
+  * ``warm``         — the same sweep served from the persistent mapping
+                       cache.
+
+Asserts the acceptance contract: the pruned sweep returns the identical
+Pareto (EDP vs area) frontier and best pair while expanding strictly fewer
+nodes.  ``paper`` scale swaps in the GPT-3 attention shapes (hours).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from .common import csv_line
+
+
+def _workload(scale: str):
+    from repro.core.einsum import batched_matmul
+    from repro.core.presets import GPT3_BH, GPT3_D_HEAD, GPT3_SEQ
+
+    if scale == "paper":
+        return [batched_matmul("QK", GPT3_BH, GPT3_SEQ, GPT3_D_HEAD,
+                               GPT3_SEQ),
+                batched_matmul("AV", GPT3_BH, GPT3_SEQ, GPT3_SEQ,
+                               GPT3_D_HEAD)]
+    return [batched_matmul("qk", 8, 4, 32, 64),
+            batched_matmul("av", 8, 4, 64, 32)]
+
+
+def _frontier_sig(report):
+    return sorted((r.arch_key, r.objective, r.area_mm2)
+                  for r in report.frontier)
+
+
+def run(scale: str = "small", workers=None) -> dict:
+    from repro.core.search import clear_caches
+    from repro.dse import explore_space, get_space
+    from repro.netmap.cache import MappingCache
+
+    space = get_space("edge")
+    einsums = _workload(scale)
+    pts, _ = space.materialize()
+    assert len(pts) >= 16, f"fig9 space shrank to {len(pts)} points"
+
+    clear_caches()
+    t0 = time.perf_counter()
+    exhaustive = explore_space(space, einsums, workers=workers,
+                               prune=False, seed_incumbents=False,
+                               collect_mappings=False)
+    t_exhaustive = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        clear_caches()
+        t0 = time.perf_counter()
+        pruned = explore_space(space, einsums, workers=workers,
+                               cache=MappingCache(root=tmp),
+                               collect_mappings=False)
+        t_pruned = time.perf_counter() - t0
+
+        clear_caches()
+        t0 = time.perf_counter()
+        warm = explore_space(space, einsums, workers=workers,
+                             cache=MappingCache(root=tmp),
+                             collect_mappings=False)
+        t_warm = time.perf_counter() - t0
+
+    # acceptance contract: identical frontier + best pair, fewer nodes
+    assert _frontier_sig(pruned) == _frontier_sig(exhaustive)
+    assert _frontier_sig(warm) == _frontier_sig(exhaustive)
+    assert pruned.best.arch_key == exhaustive.best.arch_key
+    assert pruned.best.objective == exhaustive.best.objective
+    assert pruned.n_expanded < exhaustive.n_expanded
+
+    n_pruned_points = pruned.n_pruned_roofline + pruned.n_pruned_bound
+    derived = (f"points={pruned.n_points} frontier={len(pruned.frontier)} "
+               f"pruned={n_pruned_points} "
+               f"nodes={pruned.n_expanded}/{exhaustive.n_expanded} "
+               f"prune_speedup={t_exhaustive / max(t_pruned, 1e-9):.2f}x "
+               f"warm_speedup={t_pruned / max(t_warm, 1e-9):.2f}x")
+    print(csv_line("fig9/edge_qkav", t_pruned * 1e6, derived))
+    return {
+        "edge_qkav": {
+            "n_points": pruned.n_points,
+            "n_evaluated": pruned.n_evaluated,
+            "n_pruned_roofline": pruned.n_pruned_roofline,
+            "n_pruned_bound": pruned.n_pruned_bound,
+            "frontier_size": len(pruned.frontier),
+            "frontier": [
+                {"point": r.coords, "edp_pJs": r.objective,
+                 "energy_pJ": r.energy, "latency_s": r.latency,
+                 "area_mm2": r.area_mm2}
+                for r in pruned.frontier
+            ],
+            "best_point": pruned.best.coords,
+            "best_edp_pJs": pruned.best.objective,
+            "n_expanded_pruned": pruned.n_expanded,
+            "n_expanded_exhaustive": exhaustive.n_expanded,
+            "cache_hits_warm": warm.cache_hits,
+            "cache_misses_cold": pruned.cache_misses,
+            "t_exhaustive_s": t_exhaustive,
+            "t_pruned_s": t_pruned,
+            "t_warm_s": t_warm,
+            "prune_speedup": t_exhaustive / max(t_pruned, 1e-9),
+            "warm_speedup": t_pruned / max(t_warm, 1e-9),
+        }
+    }

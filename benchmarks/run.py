@@ -80,6 +80,21 @@ def perf_smoke() -> dict:
     assert fused.energy <= bq.energy + ba.energy
     assert fused.latency <= bq.latency + ba.latency
 
+    # DSE smoke sweep: edge-small space x smoke attention pair, serial
+    # (deterministic n_expanded / pruned-point counters gate prune power;
+    # wall time gates the outer loop the same way qk_search_s gates the
+    # inner one)
+    from repro.dse import explore_space, get_space
+
+    clear_caches()
+    t0 = time.perf_counter()
+    dse = explore_space(get_space("edge-small"),
+                        [batched_matmul("fqk", 8, 4, 32, 64),
+                         batched_matmul("fav", 8, 4, 64, 32)],
+                        collect_mappings=False)
+    dse_s = time.perf_counter() - t0
+    assert dse.frontier, "DSE smoke sweep returned an empty frontier"
+
     perf = {
         "qk_search_s": round(qk_s, 3),
         "qk_n_expanded": stats.n_expanded,
@@ -92,12 +107,21 @@ def perf_smoke() -> dict:
         "fused_qkav_s": round(fused_s, 3),
         "fused_qkav_n_expanded": f_stats.n_expanded,
         "fused_qkav_edp": fused.edp,
+        "dse_sweep_s": round(dse_s, 3),
+        "dse_n_expanded": dse.n_expanded,
+        "dse_points_pruned": dse.n_pruned_roofline + dse.n_pruned_bound,
+        "dse_points_evaluated": dse.n_evaluated,
+        "dse_frontier_size": len(dse.frontier),
+        "dse_best_edp": dse.best.objective,
     }
     print(f"# perf-smoke: QK search {qk_s:.2f}s "
           f"(n_expanded={stats.n_expanded}), "
           f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x, "
           f"fused QK+AV {fused_s:.2f}s "
-          f"(n_expanded={f_stats.n_expanded})",
+          f"(n_expanded={f_stats.n_expanded}), "
+          f"DSE sweep {dse_s:.2f}s "
+          f"({dse.n_evaluated} evaluated / {perf['dse_points_pruned']} "
+          f"pruned points)",
           file=sys.stderr, flush=True)
     return perf
 
@@ -106,8 +130,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("small", "paper"), default="small")
     ap.add_argument("--only", default=None,
-                    choices=("table2", "fig6", "fig7", "fig8", "table3",
-                             "table4", "table5"))
+                    choices=("table2", "fig6", "fig7", "fig8", "fig9",
+                             "table3", "table4", "table5"))
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
@@ -131,6 +155,7 @@ def main() -> None:
         return
 
     from . import fig6_breakdown, fig7_scaling, fig8_model_speed
+    from . import fig9_dse_frontier
     from . import table2_pruning, table3_edp, table4_network_edp
     from . import table5_fusion_edp
 
@@ -139,6 +164,7 @@ def main() -> None:
         "fig6": fig6_breakdown.run,
         "fig7": fig7_scaling.run,
         "fig8": fig8_model_speed.run,
+        "fig9": fig9_dse_frontier.run,
         "table3": table3_edp.run,
         "table4": table4_network_edp.run,
         "table5": table5_fusion_edp.run,
@@ -181,6 +207,27 @@ def main() -> None:
                 "fused_qkav_s": round(row["t_fused_s"], 3),
                 "fused_qkav_n_expanded": row["n_expanded"],
                 "fused_qkav_edp": row["fused_edp_pJs"],
+            })
+        # DSE sweep: wall time plus the outer-loop effectiveness counters
+        # (cache hit/miss, arch points pruned) so the perf trajectory
+        # captures pruning power, not just speed.  Keys are fig9-prefixed:
+        # this is the 16-point `edge` sweep, NOT comparable with the gated
+        # `dse_*` smoke keys (8-point edge-small, perf_reference.json)
+        f9 = results.get("fig9") if args.scale == "small" else None
+        if f9 and "edge_qkav" in f9:
+            row = f9["edge_qkav"]
+            record["perf"].update({
+                "dse_fig9_sweep_s": round(row["t_pruned_s"], 3),
+                "dse_fig9_n_expanded": row["n_expanded_pruned"],
+                "dse_fig9_points_pruned": (row["n_pruned_roofline"]
+                                           + row["n_pruned_bound"]),
+                "dse_fig9_points_evaluated": row["n_evaluated"],
+                "dse_fig9_frontier_size": row["frontier_size"],
+                "dse_fig9_best_edp": row["best_edp_pJs"],
+                "dse_fig9_cache_hits_warm": row["cache_hits_warm"],
+                "dse_fig9_cache_misses_cold": row["cache_misses_cold"],
+                "dse_fig9_prune_speedup": round(row["prune_speedup"], 2),
+                "dse_fig9_warm_speedup": round(row["warm_speedup"], 2),
             })
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)

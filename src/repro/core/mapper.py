@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arch import Arch
 from .dataflow import count_unpruned_dataflows, make_slots
@@ -70,12 +70,16 @@ def build_work_units(
     prune_partial: bool,
     collect_sizes: bool,
     stats: MapperStats,
+    index_base: int = 0,
 ) -> List[WorkUnit]:
     """Materialize the dataplacement x skeleton cross-product.
 
     Fills the driver-side fields of ``stats`` (dataplacement/dataflow counts,
     enumeration timings and mapspace-size accumulators) as a side effect, in
     the exact enumeration order the serial driver has always used.
+    ``index_base`` offsets the unit indices so batches for several
+    architecture points can be concatenated into one engine dispatch
+    (:func:`tcm_map_best_arch`) without index collisions.
     """
     t = time.perf_counter()
     dps = cached_dataplacements(einsum, arch)
@@ -110,7 +114,7 @@ def build_work_units(
                         ppv[n.var] = ppv.get(n.var, 0) + 1
                 stats.sum_loop_pruned += 10 ** min(
                     _log10_tileshapes(einsum, ppv) - 300, 0)
-            units.append(WorkUnit(len(units), einsum, arch, sk,
+            units.append(WorkUnit(index_base + len(units), einsum, arch, sk,
                                   objective, prune_partial))
     return units
 
@@ -126,6 +130,7 @@ def tcm_map(
     backend: Optional[str] = None,
     workers: Optional[int] = None,
     share_incumbents: bool = True,
+    inc_obj: float = float("inf"),
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Find the optimal mapping of ``einsum`` on ``arch``.
 
@@ -145,6 +150,14 @@ def tcm_map(
     and, on the serial backend, its exact per-unit statistics — of old.
     Ignored when a caller-provided ``engine`` is passed (the engine's own
     setting governs).
+
+    ``inc_obj`` seeds the branch-and-bound with an *external* objective
+    upper bound (``repro.dse`` passes the best architecture point found so
+    far).  With the default ``inf`` the search is exactly historical.  The
+    pruning is sound but one-sided: when the returned optimum's objective
+    is strictly below ``inc_obj`` it is the true optimum; a ``None`` result
+    (or one at/above the bound) only proves the true optimum is no better
+    than ``inc_obj`` — callers that seed must fall back accordingly.
     """
     stats = MapperStats()
     t0 = time.perf_counter()
@@ -162,7 +175,8 @@ def tcm_map(
 
     best: Optional[MappingResult] = None
     try:
-        best = _run_and_merge(units, objective, engine, stats)
+        best = _run_and_merge(units, objective, engine, stats,
+                              inc_obj=inc_obj)
     finally:
         # engines passed in by the caller stay open (netmap reuses one pool
         # across a whole model's searches); self-made ones are torn down
@@ -197,6 +211,71 @@ def _run_and_merge(units, objective: str, engine: SearchEngine,
                 or c.objective(objective) < best.objective(objective)):
             best = c
     return best
+
+
+def tcm_map_best_arch(
+    einsum: Einsum,
+    arches: Sequence[Arch],
+    objective: str = "edp",
+    prune_partial: bool = True,
+    engine: Optional[SearchEngine] = None,
+    backend: Optional[str] = None,
+    workers: Optional[int] = None,
+    share_incumbents: bool = True,
+    inc_obj: float = float("inf"),
+) -> Tuple[int, Optional[MappingResult], MapperStats]:
+    """Find the best (architecture, mapping) pair for ``einsum`` over a
+    batch of candidate architectures in ONE engine dispatch.
+
+    The work units of every architecture point are concatenated (with
+    offset indices) and run through a single :class:`SearchEngine`, so the
+    two-phase shared incumbent propagates *across* architecture points: a
+    strong mapping found on one candidate prunes the others' subtrees.
+    Sharing one incumbent is sound here because all units optimize the same
+    einsum under the same objective — the returned winner's value equals
+    ``min`` over per-arch :func:`tcm_map` runs — but per-point optima of the
+    losing architectures are NOT recovered (their units may be cut by the
+    global bound).  Use ``repro.dse.explore_space`` when per-point values or
+    a Pareto frontier are needed.
+
+    Returns ``(best_arch_index, result, merged_stats)``; the index is -1
+    and the result None when no candidate admits a valid mapping.
+    """
+    stats = MapperStats()
+    t0 = time.perf_counter()
+    units: List[WorkUnit] = []
+    spans: List[int] = []  # spans[i] = first unit index of arch i
+    for arch in arches:
+        spans.append(len(units))
+        per = MapperStats()
+        units += build_work_units(einsum, arch, objective, prune_partial,
+                                  False, per, index_base=len(units))
+        stats.merge(per)
+    owns_engine = engine is None
+    if owns_engine:
+        engine = make_engine(backend, workers,
+                             share_incumbents=share_incumbents)
+
+    best: Optional[MappingResult] = None
+    best_arch = -1
+    try:
+        for r in engine.run(units, inc_obj):
+            stats.merge(r.stats)
+            c = r.candidate
+            if c is not None and (
+                    best is None
+                    or c.objective(objective) < best.objective(objective)):
+                best = c
+                # unit indices are contiguous per arch, in arches order
+                best_arch = sum(1 for s in spans[1:] if s <= r.index)
+    finally:
+        if owns_engine:
+            engine.close()
+    if best is not None:
+        validate_structure(einsum, arches[best_arch], best.mapping)
+    stats.finalize()
+    stats.t_total = time.perf_counter() - t0
+    return best_arch, best, stats
 
 
 def tcm_map_group(

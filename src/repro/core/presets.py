@@ -14,7 +14,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from .arch import Arch, MemLevel, SpatialFanout
+from .arch import Arch, ArchTemplate, MemLevel, SpatialFanout
 from .einsum import Einsum, TensorSpec, batched_matmul, conv1d, depthwise_conv1d, matmul
 
 # ---------------------------------------------------------------------------
@@ -64,27 +64,36 @@ def mobilenetv3_einsums(batch: int = 64) -> Dict[str, Einsum]:
 
 
 # ---------------------------------------------------------------------------
-# TPU-v4i-like (paper §VI-A2): 128MB GLB + 4 PEs, each 4MB LB + 128x128 MACs
+# TPU-v4i-like (paper §VI-A2): a 64 Mi-word GLB (= 128 MB at 2 B/word) + 4
+# PEs, each with a 2 Mi-word LB (= 4 MB at 2 B/word) and a 128x128 MAC array
 # with per-MAC weight registers.  The array multicasts inputs on one dim and
 # reduces outputs on the other.
-# Units: words (bf16), pJ, words/s.
+# Units: capacities in words (bf16, 2 B/word), energies pJ/word, bandwidths
+# words/s.
+#
+# Every preset is expressed as an ArchTemplate instance: the *_template()
+# accessor exposes the anchor for design-space sweeps (repro.dse), and the
+# historical *_like() constructors are its no-override instantiation —
+# bit-identical to the hand-written Arch values they replace (ratio-1
+# capacity scaling is skipped, see ArchTemplate._scale_level).
 # ---------------------------------------------------------------------------
 
-def tpu_v4i_like(tensors=("A", "B", "Z")) -> Arch:
+def tpu_v4i_template(tensors=("A", "B", "Z")) -> ArchTemplate:
     A, B, Z = tensors
-    return Arch(
+    return ArchTemplate(base=Arch(
         name="tpu-v4i-like",
         levels=(
             MemLevel("DRAM", float("inf"), 62.5, 62.5, 153e9),      # HBM
-            MemLevel("GLB", 64 * 2 ** 20, 6.0, 6.0, 400e9),          # 128MB/2B
+            # 64 Mi words = 128 MB at 2 B/word
+            MemLevel("GLB", 64 * 2 ** 20, 6.0, 6.0, 400e9),
             # The per-PE local buffer is dedicated to input activations and
             # partial sums (weights stream to the weight-stationary array's
             # registers) — a user dataplacement constraint that pins this
             # level, matching the paper's |DP| = 16 for GPT-3 QK on the
-            # TPU-like architecture.
+            # TPU-like architecture.  2 Mi words = 4 MB at 2 B/word.
             MemLevel("LB", 2 * 2 ** 20, 1.5, 1.5, 800e9,
                      allowed_tensors=(A, Z), mandatory=True,
-                     fixed_order=True),                              # 4MB/2B
+                     fixed_order=True),
             MemLevel("REG", 128 * 128, 0.15, 0.15, 940e12,
                      allowed_tensors=(B,), mandatory=True,
                      fixed_order=True),                              # weights
@@ -100,19 +109,24 @@ def tpu_v4i_like(tensors=("A", "B", "Z")) -> Arch:
         ),
         mac_energy=0.56,
         frequency=940e6,
-    )
+    ))
 
 
-def nvdla_like(tensors=("A", "W", "Z")) -> Arch:
-    """NVDLA-like edge accelerator: 64kB buffer + 32x192 MAC array that
-    reuses (multicasts) inputs along the 32 dim and reduces outputs along
-    the 192 dim."""
+def tpu_v4i_like(tensors=("A", "B", "Z")) -> Arch:
+    return tpu_v4i_template(tensors).instantiate()
+
+
+def nvdla_template(tensors=("A", "W", "Z")) -> ArchTemplate:
+    """NVDLA-like edge accelerator anchor: a 32 Ki-word buffer (= 64 kB at
+    2 B/word) + 32x192 MAC array that reuses (multicasts) inputs along the
+    32 dim and reduces outputs along the 192 dim."""
     A, W, Z = tensors
-    return Arch(
+    return ArchTemplate(base=Arch(
         name="nvdla-like",
         levels=(
             MemLevel("DRAM", float("inf"), 200.0, 200.0, 12.5e9),
-            MemLevel("BUF", 32 * 2 ** 10, 1.2, 1.2, 256e9),  # 64kB / 2B words
+            # 32 Ki words = 64 kB at 2 B/word
+            MemLevel("BUF", 32 * 2 ** 10, 1.2, 1.2, 256e9),
         ),
         fanouts=(
             SpatialFanout(above_level=1, dims=(32, 192),
@@ -121,15 +135,19 @@ def nvdla_like(tensors=("A", "W", "Z")) -> Arch:
         ),
         mac_energy=0.3,
         frequency=1e9,
-    )
+    ))
 
 
-def tpu_v5e_like(tensors=("A", "B", "Z")) -> Arch:
+def nvdla_like(tensors=("A", "W", "Z")) -> Arch:
+    return nvdla_template(tensors).instantiate()
+
+
+def tpu_v5e_template(tensors=("A", "B", "Z")) -> ArchTemplate:
     """Single TPU-v5e-chip-like hierarchy for kernel autotiling:
-    HBM (819 GB/s) -> VMEM (~64MB usable modeled 32Mwords bf16) -> MXU
-    (128x128).  Used by kernels/ to pick BlockSpec tile shapes."""
+    HBM -> VMEM (16 Mi words = 32 MB at 2 B/word) -> MXU (128x128).
+    Used by kernels/ to pick BlockSpec tile shapes."""
     A, B, Z = tensors
-    return Arch(
+    return ArchTemplate(base=Arch(
         name="tpu-v5e-like",
         levels=(
             MemLevel("HBM", float("inf"), 40.0, 40.0, 410e9),  # words/s (2B)
@@ -142,7 +160,11 @@ def tpu_v5e_like(tensors=("A", "B", "Z")) -> Arch:
         ),
         mac_energy=0.2,
         frequency=940e6,
-    )
+    ))
+
+
+def tpu_v5e_like(tensors=("A", "B", "Z")) -> Arch:
+    return tpu_v5e_template(tensors).instantiate()
 
 
 def small_matmul_suite() -> Dict[str, Einsum]:

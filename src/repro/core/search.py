@@ -240,6 +240,14 @@ class WorkUnit:
     sub-skeletons).  ``cached_curried_model`` dispatches on the kind, so
     the engines — incumbent sharing, beam seeding, compiled criterion
     kernels — run both unchanged.
+
+    ``arch`` is carried explicitly per unit (not per batch): one engine
+    ``run`` may legally mix units from *different* architecture points, as
+    ``tcm_map_best_arch`` and the ``repro.dse`` explorer do.  The only
+    batching contract incumbent sharing imposes is that all units in one
+    ``run`` optimize the same workload under the same ``objective`` — the
+    shared bound is an objective value, comparable across architectures but
+    not across einsums.
     """
 
     index: int  # position in the driver's enumeration order

@@ -20,13 +20,13 @@ from .cache import (CACHE_VERSION, CacheHit, MappingCache, compute_group_key,
                     compute_key)
 from .extract import (LayerEinsum, NetworkGraph, extract_einsums,
                       extract_graph)
-from .planner import (FusionRow, LayerRow, NetworkReport, UniqueSearch,
-                      map_network, network_blockspec_tiles)
+from .planner import (FusionRow, LayerRow, NetworkReport, NoValidMappingError,
+                      UniqueSearch, map_network, network_blockspec_tiles)
 
 __all__ = [
     "CACHE_VERSION", "CacheHit", "MappingCache", "compute_group_key",
     "compute_key",
     "LayerEinsum", "NetworkGraph", "extract_einsums", "extract_graph",
-    "FusionRow", "LayerRow", "NetworkReport", "UniqueSearch", "map_network",
-    "network_blockspec_tiles",
+    "FusionRow", "LayerRow", "NetworkReport", "NoValidMappingError",
+    "UniqueSearch", "map_network", "network_blockspec_tiles",
 ]

@@ -10,7 +10,8 @@ Design points:
 
   * **Content-addressed keys.** ``compute_key`` hashes the *structural*
     einsum identity (``search.einsum_key`` — tensors + rank shapes, name
-    ignored), the full ``Arch`` description, the search objective and the
+    ignored), the structural architecture identity (``arch.arch_key`` —
+    canonical serialization, name ignored), the search objective and the
     pruning flag, plus :data:`CACHE_VERSION`.  Changing any of these yields
     a different key, so stale entries are never served — bumping
     ``CACHE_VERSION`` when the cost model changes invalidates the whole
@@ -34,7 +35,7 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Optional, Union
 
-from repro.core.arch import Arch
+from repro.core.arch import Arch, arch_key
 from repro.core.einsum import Einsum
 from repro.core.fusion import FusedMapping, FusedWorkload
 from repro.core.looptree import Loop, Mapping, Storage
@@ -47,7 +48,12 @@ from repro.core.search import MapperStats, MappingResult, einsum_key
 # v3: fusion-aware planner — fused-group entries (keyed by group *content*:
 # member structures + edge wiring) join the store and singleton results can
 # now be composed against them, so the whole store is invalidated again.
-CACHE_VERSION = 3
+# v4: architectures enter the key through their structural content hash
+# (``arch_key``: name-insensitive canonical serialization) instead of
+# ``repr(arch)`` — a DSE sweep point that derives hardware identical to a
+# preset (or to another space's point) now shares its entry, so warm starts
+# cross tool and naming boundaries; old name-keyed entries are invalidated.
+CACHE_VERSION = 4
 DEFAULT_ROOT = ".tcm_cache"
 
 _STATS_FIELDS = {f.name for f in dataclasses.fields(MapperStats)}
@@ -142,13 +148,15 @@ def compute_key(einsum: Einsum, arch: Arch, objective: str,
                 version: Optional[int] = None) -> str:
     """Content hash of everything the search outcome depends on.
 
-    ``Arch`` and its nested levels/fanouts are frozen dataclasses, so their
-    ``repr`` is a complete, deterministic description; the einsum enters via
-    its structural key (name ignored, matching the search-layer memoization).
+    Both workload and hardware enter through *structural* identities: the
+    einsum via its structural key and the architecture via ``arch_key``
+    (canonical serialization, names ignored) — matching the search-layer
+    memoization, and letting DSE sweep points share entries with presets
+    that describe the same hardware under a different name.
     """
     if version is None:
         version = CACHE_VERSION
-    payload = repr((einsum_key(einsum), repr(arch), str(objective),
+    payload = repr((einsum_key(einsum), arch_key(arch), str(objective),
                     bool(prune_partial), int(version)))
     return hashlib.sha256(payload.encode()).hexdigest()
 
@@ -166,7 +174,7 @@ def compute_group_key(workload: FusedWorkload, arch: Arch, objective: str,
     if version is None:
         version = CACHE_VERSION
     payload = repr((tuple(einsum_key(m) for m in workload.members),
-                    workload.edges, repr(arch), str(objective),
+                    workload.edges, arch_key(arch), str(objective),
                     bool(prune_partial), int(version)))
     return hashlib.sha256(payload.encode()).hexdigest()
 
@@ -264,6 +272,7 @@ class MappingCache:
             "key": key,
             "einsum": einsum.name,
             "arch": arch.name,
+            "arch_key": arch_key(arch),  # structural id: DSE sweep dedup/debug
             "objective": str(objective),
             "t_search": float(t_search),
             "stats": stats_to_wire(stats) if stats is not None else {},
@@ -308,6 +317,7 @@ class MappingCache:
             "key": key,
             "group": workload.name,
             "arch": arch.name,
+            "arch_key": arch_key(arch),
             "objective": str(objective),
             "t_search": float(t_search),
             "stats": stats_to_wire(stats) if stats is not None else {},

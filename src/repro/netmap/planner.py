@@ -38,6 +38,15 @@ from .cache import MappingCache
 from .extract import LayerEinsum, extract_einsums, extract_graph
 
 
+class NoValidMappingError(RuntimeError):
+    """An extracted layer op admits no valid mapping on the target arch.
+
+    A ``RuntimeError`` subclass for backward compatibility; callers that
+    probe architecture candidates (``repro.dse``) catch exactly this so
+    engine/pool failures are never mistaken for infeasibility.
+    """
+
+
 @dataclass
 class UniqueSearch:
     """One deduplicated einsum search and where its result came from."""
@@ -326,7 +335,7 @@ def map_network(
                                         engine=engine)
                 t_search = time.perf_counter() - t1
                 if result is None:
-                    raise RuntimeError(
+                    raise NoValidMappingError(
                         f"no valid mapping for {exemplar.einsum.name} on "
                         f"{arch.name}")
                 report.t_search += t_search

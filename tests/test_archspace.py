@@ -1,0 +1,311 @@
+"""Architecture templates, serialization, content keys and validation.
+
+Covers the PR-5 satellites: Arch/SpatialFanout validation error cases,
+preset round-trip through the canonical serialization, bit-identical
+template re-expression of the hand-written presets, arch_key stability and
+per-axis inequality, and the no-collision guarantee for sweep points in the
+persistent mapping cache.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.arch import (Arch, ArchAxis, ArchSpace, ArchTemplate,
+                             MemLevel, SpatialFanout, arch_area_mm2,
+                             arch_from_dict, arch_key, arch_to_dict,
+                             level_instances)
+from repro.core.presets import (nvdla_like, nvdla_template,
+                                small_matmul_suite, tpu_v4i_like,
+                                tpu_v4i_template, tpu_v5e_like,
+                                tpu_v5e_template)
+
+PRESETS = (tpu_v4i_like, nvdla_like, tpu_v5e_like)
+
+
+def _two_level(fanouts=()):
+    return Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("BUF", 4096, 1.0, 1.0, 1e9)),
+                fanouts=fanouts)
+
+
+# --------------------------------------------------------------------------
+# Validation (satellite 1)
+# --------------------------------------------------------------------------
+
+
+def test_fanout_above_level_out_of_range_rejected():
+    with pytest.raises(ValueError, match="out of range"):
+        _two_level(fanouts=(SpatialFanout(above_level=2, dims=(4,)),))
+    with pytest.raises(ValueError, match="out of range"):
+        _two_level(fanouts=(SpatialFanout(above_level=-1, dims=(4,)),))
+
+
+def test_duplicate_fanout_below_same_level_rejected():
+    with pytest.raises(ValueError, match="duplicate fanout"):
+        _two_level(fanouts=(SpatialFanout(above_level=1, dims=(4,)),
+                            SpatialFanout(above_level=1, dims=(2,))))
+
+
+def test_distinct_fanout_levels_accepted():
+    a = _two_level(fanouts=(SpatialFanout(above_level=0, dims=(2,)),
+                            SpatialFanout(above_level=1, dims=(4,))))
+    assert a.total_compute_units == 8
+    assert a.fanout_below(1).dims == (4,)
+
+
+def test_fanout_bad_dims_and_constraint_lengths_rejected():
+    with pytest.raises(ValueError, match="dims must be >= 1"):
+        SpatialFanout(above_level=0, dims=(4, 0))
+    with pytest.raises(ValueError, match="match dims length"):
+        SpatialFanout(above_level=0, dims=(4, 2),
+                      multicast_tensor=("A",))
+    with pytest.raises(ValueError, match="match dims length"):
+        SpatialFanout(above_level=0, dims=(4, 2),
+                      reduce_tensor=("Z", None, None))
+
+
+# --------------------------------------------------------------------------
+# Serialization + preset round-trip (satellite 2)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_preset_serialization_round_trip(preset):
+    a = preset()
+    b = arch_from_dict(arch_to_dict(a))
+    assert b == a
+    assert arch_key(b) == arch_key(a)
+
+
+def test_serialization_handles_inf_and_allowed_tensors():
+    a = tpu_v4i_like()
+    d = arch_to_dict(a)
+    assert d["levels"][0]["capacity"] == "inf"  # strict-JSON safe
+    assert d["levels"][2]["allowed_tensors"] == ["A", "Z"]
+    import json
+    b = arch_from_dict(json.loads(json.dumps(d)))
+    assert b == a
+
+
+def test_presets_bit_identical_through_template():
+    """The template path must reproduce the historical hand-written Arch
+    exactly — same values, same float bit patterns (repr equality)."""
+    legacy = Arch(
+        name="nvdla-like",
+        levels=(
+            MemLevel("DRAM", float("inf"), 200.0, 200.0, 12.5e9),
+            MemLevel("BUF", 32 * 2 ** 10, 1.2, 1.2, 256e9),
+        ),
+        fanouts=(
+            SpatialFanout(above_level=1, dims=(32, 192),
+                          multicast_tensor=("A", None),
+                          reduce_tensor=(None, "Z")),
+        ),
+        mac_energy=0.3,
+        frequency=1e9,
+    )
+    templated = nvdla_like()
+    assert templated == legacy
+    assert repr(templated) == repr(legacy)
+
+
+@pytest.mark.parametrize("template,anchor_caps", [
+    (tpu_v4i_template, {("capacity", "GLB"): 64 * 2 ** 20,
+                        ("capacity", "LB"): 2 * 2 ** 20}),
+    (nvdla_template, {("capacity", "BUF"): 32 * 2 ** 10}),
+    (tpu_v5e_template, {("capacity", "VMEM"): 16 * 2 ** 20}),
+])
+def test_instantiate_at_anchor_is_bit_identical(template, anchor_caps):
+    t = template()
+    base = t.instantiate()
+    assert base == t.base and repr(base) == repr(t.base)
+    # overriding with the anchor value itself skips scaling entirely
+    at_anchor = t.instantiate(anchor_caps)
+    assert at_anchor.levels == base.levels
+    assert repr(at_anchor.levels) == repr(base.levels)
+
+
+# --------------------------------------------------------------------------
+# arch_key (satellite 3)
+# --------------------------------------------------------------------------
+
+
+def test_arch_key_ignores_name_and_field_order():
+    a = nvdla_like()
+    renamed = dataclasses.replace(a, name="totally-different")
+    assert arch_key(renamed) == arch_key(a)
+    # reorder every dict's keys; the canonical (sorted) encoding is stable
+    d = arch_to_dict(a)
+
+    def reorder(x):
+        if isinstance(x, dict):
+            return {k: reorder(x[k]) for k in reversed(list(x))}
+        if isinstance(x, list):
+            return [reorder(v) for v in x]
+        return x
+
+    assert arch_key(arch_from_dict(reorder(d))) == arch_key(a)
+
+
+def test_arch_key_int_float_spellings_agree():
+    a = _two_level()
+    b = Arch("a", (MemLevel("DRAM", float("inf"), 100.0, 100.0, 1e8),
+                   MemLevel("BUF", 4096.0, 1.0, 1.0, 1e9)))
+    assert a == b
+    assert arch_key(a) == arch_key(b)
+
+
+def test_arch_key_differs_on_every_swept_axis():
+    t = nvdla_template(tensors=("A", "B", "Z"))
+    base = t.instantiate()
+    variants = {
+        "base": base,
+        "capacity": t.instantiate({("capacity", "BUF"): 64 * 2 ** 10}),
+        "fanout": t.instantiate({("fanout", 0): (16, 96)}),
+        "mac_energy": dataclasses.replace(base, mac_energy=0.4),
+        "read_energy": dataclasses.replace(base, levels=(
+            base.levels[0],
+            dataclasses.replace(base.levels[1], read_energy=2.4))),
+        "frequency": dataclasses.replace(base, frequency=2e9),
+    }
+    tpu = tpu_v4i_template()
+    variants["level_removed"] = tpu.instantiate({("level", "REG"): False})
+    variants["tpu_base"] = tpu.instantiate()
+    keys = {name: arch_key(a) for name, a in variants.items()}
+    assert len(set(keys.values())) == len(keys), keys
+
+
+def test_sweep_points_never_collide_in_mapping_cache():
+    """Two distinct sweep points must hash to distinct persistent-cache
+    keys for the same einsum — a warm DSE sweep can never serve one
+    point's optimum for another."""
+    from repro.netmap.cache import compute_key
+
+    qk = small_matmul_suite()["QK"]
+    space = ArchSpace(
+        name="s", template=nvdla_template(tensors=("A", "B", "Z")),
+        axes=(ArchAxis("capacity", "BUF", (8 * 2 ** 10, 32 * 2 ** 10)),
+              ArchAxis("fanout", 0, ((16, 96), (32, 192)))))
+    points, _ = space.materialize()
+    assert len(points) == 4
+    cache_keys = {compute_key(qk, p.arch, "edp") for p in points}
+    assert len(cache_keys) == len(points)
+    assert len({p.key for p in points}) == len(points)
+
+
+def test_cache_key_is_arch_content_addressed():
+    """The inverse guarantee: identical hardware under different names
+    (a DSE-derived point vs the preset it equals) shares ONE cache entry."""
+    from repro.netmap.cache import compute_key
+
+    qk = small_matmul_suite()["QK"]
+    a = nvdla_like(tensors=("A", "B", "Z"))
+    renamed = dataclasses.replace(a, name="edge@capacity:BUF=32768")
+    assert compute_key(qk, renamed, "edp") == compute_key(qk, a, "edp")
+
+
+# --------------------------------------------------------------------------
+# Template instantiation semantics
+# --------------------------------------------------------------------------
+
+
+def test_capacity_scaling_follows_anchor_exponents():
+    t = nvdla_template()
+    base = t.base.levels[1]
+    quad = t.instantiate({("capacity", "BUF"): base.capacity * 4})
+    lvl = quad.levels[1]
+    assert lvl.capacity == base.capacity * 4
+    assert lvl.read_energy == pytest.approx(base.read_energy * 2.0)  # 4**0.5
+    assert lvl.write_energy == pytest.approx(base.write_energy * 2.0)
+    assert lvl.bandwidth == pytest.approx(base.bandwidth * 2.0)
+    # DRAM anchor untouched
+    assert quad.levels[0] == t.base.levels[0]
+
+
+def test_instantiate_rejects_bad_targets_and_backing_sweeps():
+    t = nvdla_template()
+    with pytest.raises(KeyError):
+        t.instantiate({("capacity", "NOPE"): 1024})
+    with pytest.raises(KeyError):
+        t.instantiate({("fanout", 3): (2, 2)})
+    with pytest.raises(ValueError, match="backing store"):
+        t.instantiate({("capacity", "DRAM"): 1024})
+    with pytest.raises(ValueError, match="backing store"):
+        t.instantiate({("level", "DRAM"): False})
+    with pytest.raises(ValueError, match="rank"):
+        t.instantiate({("fanout", 0): (32,)})
+
+
+def test_level_removal_remaps_fanouts():
+    base = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("L1", 65536, 2.0, 2.0, 1e9),
+                      MemLevel("L2", 4096, 1.0, 1.0, 1e9)),
+                fanouts=(SpatialFanout(above_level=2, dims=(8,)),))
+    t = ArchTemplate(base=base)
+    a = t.instantiate({("level", "L1"): False})
+    assert [l.name for l in a.levels] == ["DRAM", "L2"]
+    assert a.fanouts[0].above_level == 1  # still below L2
+    assert a.total_compute_units == 8
+    # a capacity override for the removed level is ignored, not an error
+    b = t.instantiate({("level", "L1"): False, ("capacity", "L1"): 1024})
+    assert b == a
+
+
+def test_level_removal_collision_is_invalid_point():
+    # tpu template has fanouts below GLB *and* LB; removing LB would land
+    # the MAC array on GLB next to the 4-PE fanout — structurally invalid,
+    # so the point must be rejected (and counted by ArchSpace.materialize).
+    t = tpu_v4i_template()
+    with pytest.raises(ValueError, match="duplicate fanout"):
+        t.instantiate({("level", "LB"): False})
+    space = ArchSpace(name="s", template=t,
+                      axes=(ArchAxis("level", "LB", (True, False)),))
+    pts, counters = space.materialize()
+    assert len(pts) == 1 and counters["n_invalid"] == 1
+
+
+def test_space_rejects_bad_axis_targets_eagerly():
+    """A typo'd axis target fails at space construction, not as an
+    all-invalid (silently empty) sweep."""
+    t = nvdla_template()
+    with pytest.raises(KeyError, match="GLBB"):
+        ArchSpace(name="s", template=t,
+                  axes=(ArchAxis("capacity", "GLBB", (1024,)),))
+    with pytest.raises(KeyError, match="fanout"):
+        ArchSpace(name="s", template=t,
+                  axes=(ArchAxis("fanout", 3, ((2, 2),)),))
+    with pytest.raises(ValueError, match="duplicate axis"):
+        ArchSpace(name="s", template=t,
+                  axes=(ArchAxis("capacity", "BUF", (1024,)),
+                        ArchAxis("capacity", "BUF", (2048,))))
+
+
+def test_space_budget_filters_and_dedup():
+    t = nvdla_template()
+    space = ArchSpace(
+        name="s", template=t,
+        axes=(ArchAxis("fanout", 0, ((16, 96), (32, 192), (64, 384))),),
+        pe_budget=32 * 192)
+    pts, counters = space.materialize()
+    assert [p.arch.total_compute_units for p in pts] == [1536, 6144]
+    assert counters["n_over_pe_budget"] == 1
+    tight = ArchSpace(name="s", template=t,
+                      axes=(ArchAxis("fanout", 0, ((16, 96), (32, 192))),),
+                      area_budget_mm2=1.0)
+    pts2, c2 = tight.materialize()
+    assert len(pts2) == 1 and c2["n_over_area_budget"] == 1
+    # duplicate coordinates (same derived arch) are deduped by content key
+    dup = ArchSpace(name="s", template=t,
+                    axes=(ArchAxis("capacity", "BUF",
+                                   (32 * 2 ** 10, 32 * 2 ** 10.0)),))
+    pts3, c3 = dup.materialize()
+    assert len(pts3) == 1 and c3["n_duplicates"] == 1
+
+
+def test_area_model_counts_instances_and_macs():
+    a = _two_level(fanouts=(SpatialFanout(above_level=0, dims=(4,)),))
+    assert level_instances(a, 0) == 1
+    assert level_instances(a, 1) == 4
+    from repro.core.arch import AREA_PER_MAC_MM2, AREA_PER_WORD_MM2
+    expected = 4 * 4096 * AREA_PER_WORD_MM2 + 4 * AREA_PER_MAC_MM2
+    assert arch_area_mm2(a) == pytest.approx(expected)

@@ -1,0 +1,200 @@
+"""Design-space exploration correctness oracle + roofline soundness.
+
+The headline contract (PR-5 acceptance): on a small space the explorer with
+roofline ordering + cross-point incumbent seeding returns the *same Pareto
+frontier* as exhaustive per-point ``tcm_map``, while expanding strictly
+fewer total branch-and-bound nodes; serial and process-pool backends are
+value-identical.
+"""
+import pytest
+
+from repro.core.arch import ArchAxis, ArchSpace
+from repro.core.einsum import batched_matmul, matmul
+from repro.core.mapper import tcm_map, tcm_map_best_arch
+from repro.core.presets import nvdla_template, small_matmul_suite
+from repro.core.search import clear_search_caches
+from repro.dse import (check_parity, einsum_bounds, explore_space,
+                       get_space, pareto_keep, resolve_workload)
+from repro.netmap.cache import MappingCache
+
+KiW = 2 ** 10
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_search_caches()
+    yield
+    clear_search_caches()
+
+
+def tiny_pair():
+    """The smoke attention pair (QK -> AV shapes, CI-sized)."""
+    return [batched_matmul("fqk", 8, 4, 32, 64),
+            batched_matmul("fav", 8, 4, 64, 32)]
+
+
+def edge8():
+    return get_space("edge-small")  # 12 combos -> 8 candidate points
+
+
+def _frontier_sig(report):
+    return sorted((r.arch_key, r.objective, r.energy, r.latency, r.area_mm2)
+                  for r in report.frontier)
+
+
+def _evaluated_sig(report):
+    return sorted((r.arch_key, r.status, r.objective, r.energy, r.latency)
+                  for r in report.rows)
+
+
+# --------------------------------------------------------------------------
+# Oracle: pruned + seeded explorer == exhaustive per-point search
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("objective", ["edp", "energy", "latency"])
+def test_explorer_matches_exhaustive_frontier(objective):
+    space, einsums = edge8(), tiny_pair()
+    fast = explore_space(space, einsums, objective)
+    slow = explore_space(space, einsums, objective, prune=False,
+                         seed_incumbents=False)
+    assert slow.n_evaluated == 8  # oracle really searched every point
+    assert fast.n_pruned_roofline + fast.n_pruned_bound > 0
+    assert _frontier_sig(fast) == _frontier_sig(slow)
+    assert fast.best.arch_key == slow.best.arch_key
+    assert fast.best.objective == slow.best.objective
+    # bound-based pruning must save work, not just points: strictly fewer
+    # total expansions (counters asserted per the acceptance criteria)
+    assert fast.n_expanded < slow.n_expanded
+
+
+def test_explorer_evaluated_points_are_exact():
+    """Seeded searches that survive the bound return true per-point optima:
+    every evaluated row equals an independent unseeded tcm_map total."""
+    space, einsums = edge8(), tiny_pair()
+    rep = explore_space(space, einsums)
+    points = {p.key: p for p in space.points()}
+    checked = 0
+    for row in rep.rows:
+        if row.status != "evaluated":
+            continue
+        arch = points[row.arch_key].arch
+        energy = latency = 0.0
+        for e in einsums:
+            best, _ = tcm_map(e, arch, collect_sizes=False)
+            energy += best.energy
+            latency += best.latency
+        assert row.energy == energy
+        assert row.latency == latency
+        checked += 1
+    assert checked >= 2
+
+
+def test_serial_and_process_pool_value_identical():
+    space, einsums = edge8(), tiny_pair()
+    serial = explore_space(space, einsums)
+    pool = explore_space(space, einsums, workers=2)
+    assert _evaluated_sig(pool) == _evaluated_sig(serial)
+    assert _frontier_sig(pool) == _frontier_sig(serial)
+    assert pool.best.arch_key == serial.best.arch_key
+
+
+def test_check_parity_helper():
+    ok, msg = check_parity(edge8(), tiny_pair(), n_points=3)
+    assert ok, msg
+    assert "parity ok" in msg
+
+
+def test_resolve_workload_and_named_spaces():
+    es = resolve_workload("QK,FFA")
+    assert [e.name for e in es] == ["QK", "FFA"]
+    with pytest.raises(KeyError):
+        resolve_workload("NOPE")
+    assert get_space("edge").size == 16
+    with pytest.raises(KeyError):
+        get_space("nope")
+
+
+# --------------------------------------------------------------------------
+# Roofline soundness
+# --------------------------------------------------------------------------
+
+
+def test_roofline_bounds_are_sound_floors():
+    """No valid mapping may beat the roofline floor on energy or latency —
+    checked against the true optimum on every point of the CI space, for
+    einsums with and without spatial-discount-eligible tensors."""
+    suite = small_matmul_suite()
+    einsums = [suite["P0"], tiny_pair()[0]]
+    for point in edge8().points():
+        for e in einsums:
+            b = einsum_bounds(e, point.arch)
+            for objective in ("energy", "latency"):
+                best, _ = tcm_map(e, point.arch, objective=objective,
+                                  collect_sizes=False)
+                assert best is not None
+                assert b.energy <= best.energy * (1 + 1e-12)
+                assert b.latency <= best.latency * (1 + 1e-12)
+
+
+def test_pareto_keep_semantics():
+    pts = [(1.0, 5.0), (2.0, 4.0), (3.0, 3.0), (3.0, 5.0), (1.0, 5.0)]
+    keep = pareto_keep(pts)
+    # (3,5) dominated by (3,3)/(2,4); exact ties (1,5)&(1,5) both kept
+    assert keep == [True, True, True, False, True]
+
+
+# --------------------------------------------------------------------------
+# Cross-arch batched search (tcm_map_best_arch)
+# --------------------------------------------------------------------------
+
+
+def test_tcm_map_best_arch_matches_per_arch_min():
+    qk = tiny_pair()[0]
+    arches = [p.arch for p in edge8().points()][:4]
+    per = []
+    for a in arches:
+        best, _ = tcm_map(qk, a, collect_sizes=False)
+        per.append(best)
+    want_idx = min(range(len(per)), key=lambda i: per[i].edp)
+    idx, best, stats = tcm_map_best_arch(qk, arches)
+    assert idx == want_idx
+    assert (best.energy, best.latency, best.edp) == (
+        per[want_idx].energy, per[want_idx].latency, per[want_idx].edp)
+    assert stats.n_expanded > 0
+    # parallel backend returns the same winner
+    idx2, best2, _ = tcm_map_best_arch(qk, arches, workers=2)
+    assert idx2 == idx and best2.edp == best.edp
+
+
+def test_tcm_map_seeded_none_is_sound():
+    """tcm_map(inc_obj=T): a None (or >= T) result proves the optimum is
+    no better than T; a result below T is the exact optimum."""
+    qk = tiny_pair()[0]
+    arch = edge8().template.instantiate()
+    best, _ = tcm_map(qk, arch, collect_sizes=False)
+    loose, _ = tcm_map(qk, arch, collect_sizes=False, inc_obj=best.edp * 2)
+    assert loose is not None and loose.edp == best.edp
+    tight, _ = tcm_map(qk, arch, collect_sizes=False, inc_obj=best.edp / 2)
+    assert tight is None or tight.edp >= best.edp / 2
+
+
+# --------------------------------------------------------------------------
+# Warm cache across sweeps
+# --------------------------------------------------------------------------
+
+
+def test_sweep_warm_cache_round_trip(tmp_path):
+    space, einsums = edge8(), tiny_pair()
+    cache = MappingCache(root=tmp_path)
+    cold = explore_space(space, einsums, cache=cache)
+    assert cold.cache_misses > 0 and cold.cache_hits == 0
+    clear_search_caches()
+    warm = explore_space(space, einsums, cache=MappingCache(root=tmp_path))
+    # every evaluated point's per-einsum optima come from disk...
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == sum(r.cached for r in warm.rows)
+    assert warm.t_search == 0.0
+    # ...and the sweep outcome is identical to the cold run
+    assert _evaluated_sig(warm) == _evaluated_sig(cold)
+    assert _frontier_sig(warm) == _frontier_sig(cold)
