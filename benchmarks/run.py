@@ -131,7 +131,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=("small", "paper"), default="small")
     ap.add_argument("--only", default=None,
                     choices=("table2", "fig6", "fig7", "fig8", "fig9",
-                             "table3", "table4", "table5"))
+                             "table3", "table4", "table5", "table6"))
     ap.add_argument("--workers", type=int, default=None,
                     help="search-engine worker processes (default: serial)")
     ap.add_argument("--out", default="bench_results.json")
@@ -157,7 +157,7 @@ def main() -> None:
     from . import fig6_breakdown, fig7_scaling, fig8_model_speed
     from . import fig9_dse_frontier
     from . import table2_pruning, table3_edp, table4_network_edp
-    from . import table5_fusion_edp
+    from . import table5_fusion_edp, table6_gap
 
     benches = {
         "table2": table2_pruning.run,
@@ -168,6 +168,7 @@ def main() -> None:
         "table3": table3_edp.run,
         "table4": table4_network_edp.run,
         "table5": table5_fusion_edp.run,
+        "table6": table6_gap.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}
@@ -200,6 +201,22 @@ def main() -> None:
                 })
             if "speedup_numpy" in row:
                 record["perf"]["curried_model_speedup"] = row["speedup_numpy"]
+        # gap harness: surface the soundness verdict and the largest-budget
+        # SA/GA gaps — ungated trend keys (perf_reference.json ignores them)
+        t6 = results.get("table6") if args.scale == "small" else None
+        if t6:
+            viol = next((r["soundness_violations"] for r in t6
+                         if "soundness_violations" in r), None)
+            record["perf"]["gap_soundness_violations"] = viol
+            top_budget = max((r["budget"] for r in t6 if "budget" in r),
+                             default=None)
+            for r in t6:
+                if r.get("budget") == top_budget and \
+                        r.get("baseline") in ("sa", "ga") and \
+                        r.get("gap") is not None:
+                    key = (f"gap_{r['baseline']}_{r['workload']}"
+                           f"@{r['arch']}_{top_budget}")
+                    record["perf"][key] = r["gap"]
         t5 = results.get("table5") if args.scale == "small" else None
         if t5 and "qkav_smoke" in t5:
             row = t5["qkav_smoke"]

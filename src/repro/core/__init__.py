@@ -10,7 +10,9 @@ Public API:
 from .arch import (Arch, ArchAxis, ArchPoint, ArchSpace, ArchTemplate,
                    MemLevel, SpatialFanout, arch_area_mm2, arch_from_dict,
                    arch_key, arch_to_dict)
-from .einsum import Einsum, TensorSpec, batched_matmul, conv1d, depthwise_conv1d, matmul
+from .einsum import (Einsum, TensorSpec, batched_matmul, conv1d,
+                     depthwise_conv1d, einsum_from_dict, einsum_to_dict,
+                     matmul)
 from .looptree import Loop, Storage, render, validate_structure
 from .mapper import (MapperStats, MappingResult, tcm_map, tcm_map_best_arch,
                      unpruned_mapspace_log10)
@@ -24,7 +26,7 @@ __all__ = [
     "ArchAxis", "ArchPoint", "ArchSpace", "ArchTemplate",
     "arch_area_mm2", "arch_from_dict", "arch_key", "arch_to_dict",
     "Einsum", "TensorSpec", "matmul", "batched_matmul", "conv1d",
-    "depthwise_conv1d",
+    "depthwise_conv1d", "einsum_from_dict", "einsum_to_dict",
     "Loop", "Storage", "render", "validate_structure",
     "tcm_map", "tcm_map_best_arch", "MapperStats", "MappingResult",
     "unpruned_mapspace_log10",

@@ -1,11 +1,22 @@
-"""Baseline mappers (paper §VI-E): Timeloop-like random sampling,
-Timeloop+Hint (full-spatial-utilization constraint), and a LOMA-like
-tile-shapes-first enumerator with an LPF budget.
+"""Baseline mappers (paper §VI-E + the optimality-gap harness): Timeloop-like
+random sampling, Timeloop+Hint (full-spatial-utilization constraint), a
+LOMA-like tile-shapes-first enumerator with an LPF budget, a simulated-
+annealing mapper, and a GAMMA-style evolutionary mapper ("Evolutionary
+Mapping of Neural Networks to Spatial Accelerators").
 
 All baselines evaluate with the SAME reference model as TCM, so EDP
 comparisons isolate *search* quality, exactly as in the paper.  Budgets are
 expressed in model evaluations rather than wall-clock (single-core container;
-see DESIGN.md), with wall-clock reported alongside.
+see DESIGN.md), with wall-clock reported alongside.  Every baseline is fully
+deterministic under a given seed — best-mapping selection uses a strict
+``<`` in evaluation order with no wall-clock-dependent tie-breaks — so gap
+curves and soundness-fuzz repro cases replay bit-identically.
+
+The annealing and evolutionary mappers search through
+:class:`repro.gap.gym.MapspaceGym` — TCM's own pruned mapspace under
+``refmodel.evaluate`` — while the Timeloop/LOMA samplers draw from the
+*unpruned* space; together they probe both layers of the bound machinery
+(see ``repro.gap``).
 """
 from __future__ import annotations
 
@@ -25,6 +36,8 @@ from .einsum import Einsum
 from .looptree import Loop, Mapping, Storage
 from .refmodel import EvalResult, evaluate
 
+_OBJECTIVE_KINDS = ("edp", "energy", "latency")
+
 
 @dataclass
 class BaselineResult:
@@ -35,10 +48,28 @@ class BaselineResult:
     wall_s: float
 
     def objective(self, kind: str = "edp") -> float:
+        if kind not in _OBJECTIVE_KINDS:
+            raise ValueError(
+                f"unknown objective kind {kind!r}; expected one of "
+                f"{', '.join(_OBJECTIVE_KINDS)}")
         if self.best is None:
             return float("inf")
         return {"edp": self.best.edp, "energy": self.best.energy,
                 "latency": self.best.latency}[kind]
+
+
+def _check_kind(kind: str) -> None:
+    if kind not in _OBJECTIVE_KINDS:
+        raise ValueError(
+            f"unknown objective kind {kind!r}; expected one of "
+            f"{', '.join(_OBJECTIVE_KINDS)}")
+
+
+def _obj(res, kind: str) -> float:
+    """Objective of an evaluation result; ``ValueError`` on unknown kinds."""
+    _check_kind(kind)
+    return {"edp": res.edp, "energy": res.energy,
+            "latency": res.latency}[kind]
 
 
 def _rand_factorization(rng: random.Random, n: int, k: int) -> List[int]:
@@ -160,8 +191,7 @@ def timeloop_like(einsum: Einsum, arch: Arch, budget_evals: int,
         if not res.valid:
             continue
         n_valid += 1
-        obj = {"edp": res.edp, "energy": res.energy,
-               "latency": res.latency}[objective]
+        obj = _obj(res, objective)
         if best is None or obj < best[0]:
             best = (obj, m, res)
     wall = time.perf_counter() - t0
@@ -217,11 +247,128 @@ def loma_like(einsum: Einsum, arch: Arch, budget_evals: int,
         if not res.valid:
             continue
         n_valid += 1
-        obj = {"edp": res.edp, "energy": res.energy,
-               "latency": res.latency}[objective]
+        obj = _obj(res, objective)
         if best is None or obj < best[0]:
             best = (obj, m2, res)
     wall = time.perf_counter() - t0
     if best is None:
         return BaselineResult(None, None, n_eval, 0, wall)
     return BaselineResult(best[1], best[2], n_eval, n_valid, wall)
+
+
+# ---------------------------------------------------------------------------
+# Gym-based metaheuristics (the optimality-gap harness's competitors)
+# ---------------------------------------------------------------------------
+
+
+def simulated_annealing(einsum: Einsum, arch: Arch, budget_evals: int,
+                        seed: int = 0, objective: str = "edp",
+                        t_start: float = 0.5, t_end: float = 1e-3,
+                        ) -> BaselineResult:
+    """Simulated-annealing mapper over TCM's own mapspace.
+
+    Searches through :class:`repro.gap.gym.MapspaceGym` (dataplacement x
+    skeleton x divisor-constrained tile shapes, ``refmodel.evaluate`` cost).
+    Neighbourhood = tile-factor swaps, loop-order/skeleton transpositions
+    and dataplacement hops (``MapspaceGym.perturb``).  Acceptance uses the
+    *relative* objective gap ``obj/cur - 1`` so the temperature schedule is
+    scale-free across workloads and objectives; the schedule is geometric
+    from ``t_start`` to ``t_end`` over the eval budget.  Invalid (capacity-
+    violating) candidates consume budget but are never accepted.
+    """
+    from ..gap.gym import MapspaceGym
+
+    _check_kind(objective)
+    gym = MapspaceGym(einsum, arch)
+    rng = random.Random(seed)
+    t0 = time.perf_counter()
+    best: Optional[Tuple[float, Mapping, EvalResult]] = None
+    cur: Optional[object] = None
+    cur_obj = float("inf")
+    alpha = (t_end / t_start) ** (1.0 / max(budget_evals - 1, 1))
+    temp = t_start
+    while gym.n_evals < budget_evals:
+        if cur is None:
+            cand = gym.random_point(rng)
+            if cand is None:
+                break
+        else:
+            cand = gym.perturb(cur, rng) or gym.random_point(rng)
+            if cand is None:
+                temp *= alpha
+                continue
+        res = gym.evaluate(cand)
+        temp *= alpha
+        if not res.valid:
+            continue
+        obj = _obj(res, objective)
+        if best is None or obj < best[0]:
+            best = (obj, gym.mapping(cand), res)
+        if (obj < cur_obj
+                or rng.random() < math.exp(
+                    -max(obj / cur_obj - 1.0, 0.0) / max(temp, 1e-12))):
+            cur, cur_obj = cand, obj
+    wall = time.perf_counter() - t0
+    if best is None:
+        return BaselineResult(None, None, gym.n_evals, gym.n_valid, wall)
+    return BaselineResult(best[1], best[2], gym.n_evals, gym.n_valid, wall)
+
+
+def evolutionary(einsum: Einsum, arch: Arch, budget_evals: int,
+                 seed: int = 0, objective: str = "edp",
+                 pop_size: int = 24, elite: int = 4,
+                 tournament: int = 3, mutate_p: float = 0.5,
+                 ) -> BaselineResult:
+    """GAMMA-style evolutionary mapper over TCM's own mapspace.
+
+    Genome = a :class:`~repro.gap.gym.GymPoint` (unit + per-site tile
+    factors).  Crossover recombines per-rank-var factorizations between
+    parents sharing a unit (``MapspaceGym.crossover``); mutation is the
+    annealer's neighbourhood move, which also drifts across skeletons and
+    dataplacements.  Tournament selection + elitism; invalid candidates get
+    an infinite fitness.  Fully deterministic under ``seed``.
+    """
+    from ..gap.gym import MapspaceGym
+
+    _check_kind(objective)
+    gym = MapspaceGym(einsum, arch)
+    rng = random.Random(seed)
+    t0 = time.perf_counter()
+    best: Optional[Tuple[float, Mapping, EvalResult]] = None
+
+    def fitness(point):
+        nonlocal best
+        res = gym.evaluate(point)
+        if not res.valid:
+            return float("inf")
+        obj = _obj(res, objective)
+        if best is None or obj < best[0]:
+            best = (obj, gym.mapping(point), res)
+        return obj
+
+    pop: List[Tuple[float, object]] = []
+    while len(pop) < pop_size and gym.n_evals < budget_evals:
+        p = gym.random_point(rng)
+        if p is None:
+            break
+        pop.append((fitness(p), p))
+
+    def select():
+        # tournament over list positions: ties break to the earlier insert
+        contenders = sorted(rng.randrange(len(pop)) for _ in range(tournament))
+        return min(contenders, key=lambda i: (pop[i][0], i))
+
+    while pop and gym.n_evals < budget_evals:
+        ranked = sorted(range(len(pop)), key=lambda i: (pop[i][0], i))
+        nxt = [pop[i] for i in ranked[:elite]]
+        while len(nxt) < pop_size and gym.n_evals < budget_evals:
+            pa, pb = pop[select()][1], pop[select()][1]
+            child = gym.crossover(pa, pb, rng)
+            if rng.random() < mutate_p:
+                child = gym.perturb(child, rng) or child
+            nxt.append((fitness(child), child))
+        pop = nxt
+    wall = time.perf_counter() - t0
+    if best is None:
+        return BaselineResult(None, None, gym.n_evals, gym.n_valid, wall)
+    return BaselineResult(best[1], best[2], gym.n_evals, gym.n_valid, wall)

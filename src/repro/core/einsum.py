@@ -96,6 +96,51 @@ class Einsum:
         return size
 
 
+# -- serialization -----------------------------------------------------------
+
+
+def einsum_to_dict(einsum: Einsum) -> dict:
+    """Strict-JSON canonical form (the ``arch_to_dict`` analogue).
+
+    Affine dims ``(p, r)`` are encoded as two-element lists; plain dims as
+    strings.  ``einsum_from_dict`` is the exact inverse, so fuzzed
+    soundness-violation repro cases (``repro.gap.soundness``) round-trip
+    workloads bit-exactly through JSON.
+    """
+    return {
+        "name": einsum.name,
+        "rank_shapes": {v: int(s) for v, s in
+                        sorted(einsum.rank_shapes.items())},
+        "tensors": [
+            {
+                "name": t.name,
+                "dims": [list(d) if isinstance(d, tuple) else d
+                         for d in t.dims],
+                "is_output": t.is_output,
+                "word_bits": t.word_bits,
+            }
+            for t in einsum.tensors
+        ],
+    }
+
+
+def einsum_from_dict(d: dict) -> Einsum:
+    """Inverse of :func:`einsum_to_dict`; tolerant of key order."""
+    tensors = tuple(
+        TensorSpec(
+            name=t["name"],
+            dims=tuple(tuple(x) if isinstance(x, list) else x
+                       for x in t["dims"]),
+            is_output=bool(t.get("is_output", False)),
+            word_bits=int(t.get("word_bits", 16)),
+        )
+        for t in d["tensors"]
+    )
+    return Einsum(name=d["name"], tensors=tensors,
+                  rank_shapes={v: int(s)
+                               for v, s in d["rank_shapes"].items()})
+
+
 # -- workload graph ----------------------------------------------------------
 
 

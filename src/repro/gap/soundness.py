@@ -1,0 +1,307 @@
+"""Soundness fuzzing: cross-check TCM against the brute-force oracle and the
+gym baselines on tiny random workloads.
+
+Each fuzz case draws a tiny einsum (matmul / batched matmul / conv) and a
+small 1-2-level architecture, then asserts, for one objective:
+
+  1. *oracle agreement* — ``tcm_map``'s optimum equals
+     ``core.bruteforce.brute_force_optimum``'s over the unpruned space
+     (within ``REL_EPS`` relative tolerance, both directions);
+  2. *no baseline ever beats the optimum* — random sampling, simulated
+     annealing and the evolutionary mapper at a small eval budget all land
+     at or above it;
+  3. every baseline's best mapping is ``validate_structure``-clean.
+
+A violated case is *minimized* (greedily shrinking rank shapes and memory
+capacity while the violation reproduces) and serialized to a replayable
+JSON repro (seed + einsum + arch), so a failed CI fuzz run hands the next
+session a one-command reproduction instead of a flaky stack trace.
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.arch import Arch, MemLevel, SpatialFanout, arch_from_dict, \
+    arch_to_dict
+from ..core.baselines import evolutionary, simulated_annealing, timeloop_like
+from ..core.bruteforce import brute_force_optimum
+from ..core.einsum import (Einsum, TensorSpec, batched_matmul,
+                           einsum_from_dict, einsum_to_dict, matmul)
+from ..core.looptree import validate_structure
+from ..core.mapper import tcm_map
+from .runner import REL_EPS, derive_seed
+
+OBJECTIVES = ("edp", "energy", "latency")
+
+# per-baseline eval budget inside one fuzz case; small on purpose — the
+# point is coverage over many (einsum, arch) draws, not search quality
+CASE_BUDGET = 40
+
+BASELINE_FNS: Dict[str, Callable] = {
+    "random": lambda e, a, s, o: timeloop_like(
+        e, a, budget_evals=CASE_BUDGET, seed=s, objective=o),
+    "sa": lambda e, a, s, o: simulated_annealing(
+        e, a, budget_evals=CASE_BUDGET, seed=s, objective=o),
+    "ga": lambda e, a, s, o: evolutionary(
+        e, a, budget_evals=CASE_BUDGET, seed=s, objective=o,
+        pop_size=8, elite=2),
+}
+
+
+@dataclass
+class FuzzCase:
+    """One replayable fuzz draw (everything needed to re-run it)."""
+
+    seed: int
+    einsum: Einsum
+    arch: Arch
+    objective: str
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": 1,
+            "seed": self.seed,
+            "objective": self.objective,
+            "einsum": einsum_to_dict(self.einsum),
+            "arch": arch_to_dict(self.arch),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FuzzCase":
+        return cls(seed=int(d["seed"]),
+                   einsum=einsum_from_dict(d["einsum"]),
+                   arch=arch_from_dict(d["arch"]),
+                   objective=d["objective"])
+
+
+@dataclass
+class SoundnessViolation:
+    kind: str  # oracle_mismatch | baseline_beats_optimum | invalid_structure
+    detail: str
+    case: FuzzCase
+    minimized: Optional[FuzzCase] = None
+
+    def to_dict(self) -> dict:
+        out = {"kind": self.kind, "detail": self.detail,
+               "case": self.case.to_dict()}
+        if self.minimized is not None:
+            out["minimized"] = self.minimized.to_dict()
+        return out
+
+
+@dataclass
+class FuzzReport:
+    n_cases: int = 0
+    n_oracle_checked: int = 0
+    n_baseline_runs: int = 0
+    wall_s: float = 0.0
+    violations: List[SoundnessViolation] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": 1,
+            "n_cases": self.n_cases,
+            "n_oracle_checked": self.n_oracle_checked,
+            "n_baseline_runs": self.n_baseline_runs,
+            "wall_s": round(self.wall_s, 3),
+            "ok": self.ok,
+            "violations": [v.to_dict() for v in self.violations],
+        }
+
+
+# shape whitelists keep the brute-force oracle tractable: its enumeration
+# grows with the product of per-var ordered-factorization counts (and, for
+# affine convs, keep_unit_loops puts every var in every slot's permutation),
+# so fuzz diversity comes from many draws, not from big shapes
+_MM_SHAPES = ((2, 2, 2), (3, 2, 2), (2, 3, 2), (4, 2, 2), (2, 2, 4),
+              (4, 3, 2), (3, 3, 2), (6, 2, 2), (4, 4, 2), (3, 2, 4))
+_BMM_SHAPES = ((2, 2, 2, 2), (2, 3, 2, 2), (3, 2, 2, 2), (2, 2, 3, 2),
+               (2, 4, 2, 2))
+_CONV_SHAPES = ((4, 2), (4, 3), (6, 2))
+
+
+def random_case(rng: random.Random, objective: Optional[str] = None
+                ) -> FuzzCase:
+    """Draw one tiny (einsum, arch, objective) triple.
+
+    Shapes stay tiny so the brute-force oracle enumerates each case in
+    around a second or less, letting CI clear hundreds of cases per run.
+    """
+    seed = rng.randrange(2 ** 31)
+    r = random.Random(seed)
+    kind = r.randrange(3)
+    if kind == 0:
+        ein = matmul("fz_mm", *r.choice(_MM_SHAPES))
+    elif kind == 1:
+        ein = batched_matmul("fz_bmm", *r.choice(_BMM_SHAPES))
+    else:
+        # 1-D conv with an affine input dim (halo); only two rank vars —
+        # keep_unit_loops=True enumeration is exponential in the var count
+        P, R = r.choice(_CONV_SHAPES)
+        ein = Einsum("fz_conv",
+                     (TensorSpec("A", (("p", "r"),)),
+                      TensorSpec("W", ("r",)),
+                      TensorSpec("Z", ("p",), is_output=True)),
+                     {"p": P, "r": R})
+    dram_e = r.choice([50.0, 100.0, 200.0])
+    levels = [MemLevel("DRAM", float("inf"), dram_e, dram_e,
+                       r.choice([1e7, 1e8]))]
+    cap = r.choice([6, 8, 16, 64, 256])
+    glb_e = r.choice([0.5, 1.0, 2.0])
+    levels.append(MemLevel("GLB", cap, glb_e, glb_e, 1e9))
+    fanouts: Tuple[SpatialFanout, ...] = ()
+    if r.random() < 0.4:
+        # small spatial array below the innermost level, with multicast /
+        # reduction wiring on the einsum's first input and its output
+        first_in = ein.inputs[0].name
+        out_t = ein.output.name
+        fanouts = (SpatialFanout(above_level=1, dims=(2, 2),
+                                 multicast_tensor=(first_in, None),
+                                 reduce_tensor=(None, out_t)),)
+    arch = Arch("fuzz", tuple(levels), fanouts=fanouts,
+                mac_energy=r.choice([0.3, 0.5]))
+    obj = objective if objective is not None else OBJECTIVES[r.randrange(3)]
+    return FuzzCase(seed=seed, einsum=ein, arch=arch, objective=obj)
+
+
+def check_case(case: FuzzCase, oracle: bool = True
+               ) -> Tuple[List[SoundnessViolation], int]:
+    """Run one case; returns (violations, n_baseline_runs)."""
+    violations: List[SoundnessViolation] = []
+    best, _ = tcm_map(case.einsum, case.arch, objective=case.objective)
+    opt = best.objective(case.objective) if best is not None else float("inf")
+
+    if oracle:
+        # convs have affine (partially-relevant) dims where bound-1 loops
+        # matter for halo adjacency; keep them in the oracle's enumeration
+        affine = any(isinstance(d, tuple) for t in case.einsum.tensors
+                     for d in t.dims)
+        bf = brute_force_optimum(case.einsum, case.arch,
+                                 objective=case.objective,
+                                 keep_unit_loops=affine)
+        bf_obj = float("inf")
+        if bf is not None:
+            bf_obj = {"edp": bf.result.edp, "energy": bf.result.energy,
+                      "latency": bf.result.latency}[case.objective]
+        if (best is None) != (bf is None):
+            violations.append(SoundnessViolation(
+                "oracle_mismatch",
+                f"tcm={'none' if best is None else opt} vs "
+                f"bruteforce={'none' if bf is None else bf_obj}", case))
+        elif best is not None and not (
+                bf_obj * (1 - REL_EPS) <= opt <= bf_obj * (1 + REL_EPS)):
+            violations.append(SoundnessViolation(
+                "oracle_mismatch",
+                f"tcm optimum {opt} != bruteforce {bf_obj}", case))
+
+    n_runs = 0
+    for bname, fn in BASELINE_FNS.items():
+        s = derive_seed(case.seed, "fuzz", bname)
+        r = fn(case.einsum, case.arch, s, case.objective)
+        n_runs += 1
+        obj = r.objective(case.objective)
+        if obj < opt * (1 - REL_EPS):
+            violations.append(SoundnessViolation(
+                "baseline_beats_optimum",
+                f"{bname} found {obj} < claimed optimum {opt}", case))
+        if r.best_mapping is not None:
+            try:
+                validate_structure(case.einsum, case.arch, r.best_mapping)
+            except AssertionError as e:
+                violations.append(SoundnessViolation(
+                    "invalid_structure", f"{bname}: {e}", case))
+    return violations, n_runs
+
+
+def _violates(case: FuzzCase) -> bool:
+    vs, _ = check_case(case)
+    return bool(vs)
+
+
+def minimize_case(case: FuzzCase, max_steps: int = 32) -> FuzzCase:
+    """Greedy shrink: repeatedly halve one rank shape (to a proper divisor)
+    or the on-chip capacity while the case still violates.  Deterministic;
+    returns the smallest still-violating case found."""
+    cur = case
+    for _ in range(max_steps):
+        shrunk = None
+        for v, shape in sorted(cur.einsum.rank_shapes.items()):
+            if shape <= 2:
+                continue
+            smaller = max(d for d in range(1, shape) if shape % d == 0)
+            if smaller < 2:
+                continue
+            shapes = dict(cur.einsum.rank_shapes)
+            shapes[v] = smaller
+            cand = FuzzCase(cur.seed,
+                            Einsum(cur.einsum.name, cur.einsum.tensors,
+                                   shapes),
+                            cur.arch, cur.objective)
+            if _violates(cand):
+                shrunk = cand
+                break
+        if shrunk is None:
+            d = arch_to_dict(cur.arch)
+            cap = d["levels"][-1]["capacity"]
+            if isinstance(cap, (int, float)) and cap > 4:
+                d["levels"][-1]["capacity"] = int(cap) // 2
+                cand = FuzzCase(cur.seed, cur.einsum, arch_from_dict(d),
+                                cur.objective)
+                if _violates(cand):
+                    shrunk = cand
+        if shrunk is None:
+            return cur
+        cur = shrunk
+    return cur
+
+
+def fuzz(n_cases: int, seed: int = 0,
+         objectives: Sequence[str] = OBJECTIVES,
+         oracle: bool = True,
+         time_budget_s: Optional[float] = None,
+         minimize: bool = True,
+         verbose: bool = False) -> FuzzReport:
+    """Run ``n_cases`` fuzz draws (round-robin over ``objectives``)."""
+    rng = random.Random(seed)
+    report = FuzzReport()
+    t0 = time.perf_counter()
+    for i in range(n_cases):
+        if time_budget_s is not None and \
+                time.perf_counter() - t0 > time_budget_s:
+            break
+        case = random_case(rng, objective=objectives[i % len(objectives)])
+        vs, n_runs = check_case(case, oracle=oracle)
+        report.n_cases += 1
+        report.n_oracle_checked += 1 if oracle else 0
+        report.n_baseline_runs += n_runs
+        for v in vs:
+            if minimize:
+                v.minimized = minimize_case(case)
+            report.violations.append(v)
+        if verbose and (i + 1) % 25 == 0:
+            print(f"# fuzz: {i + 1}/{n_cases} cases, "
+                  f"{len(report.violations)} violation(s), "
+                  f"{time.perf_counter() - t0:.1f}s", flush=True)
+    report.wall_s = time.perf_counter() - t0
+    return report
+
+
+def write_repro(violation: SoundnessViolation, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(violation.to_dict(), f, indent=2, sort_keys=True)
+
+
+def replay(path: str) -> Tuple[List[SoundnessViolation], int]:
+    """Re-run a serialized repro case (the minimized one when present)."""
+    with open(path) as f:
+        d = json.load(f)
+    case = FuzzCase.from_dict(d.get("minimized") or d["case"])
+    return check_case(case)

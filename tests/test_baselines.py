@@ -3,8 +3,10 @@ import numpy as np
 import pytest
 
 from repro.core.arch import Arch, MemLevel, SpatialFanout
-from repro.core.baselines import loma_like, timeloop_like
+from repro.core.baselines import (evolutionary, loma_like,
+                                  simulated_annealing, timeloop_like)
 from repro.core.einsum import matmul
+from repro.core.looptree import validate_structure
 from repro.core.mapper import tcm_map
 
 
@@ -51,5 +53,47 @@ def test_tcm_at_least_as_good_as_all_baselines(setup):
     assert best is not None
     for r in (timeloop_like(ein, arch, 500, seed=4),
               timeloop_like(ein, arch, 500, seed=4, full_spatial_hint=True),
-              loma_like(ein, arch, 500, lpf_limit=3, seed=4)):
+              loma_like(ein, arch, 500, lpf_limit=3, seed=4),
+              simulated_annealing(ein, arch, 500, seed=4),
+              evolutionary(ein, arch, 500, seed=4)):
         assert best.edp <= r.objective("edp") * (1 + 1e-9)
+
+
+def test_sa_and_ga_find_valid_structures(setup):
+    ein, arch = setup
+    for fn in (simulated_annealing, evolutionary):
+        r = fn(ein, arch, budget_evals=200, seed=5)
+        assert r.n_valid > 0
+        assert r.best is not None and r.best.valid
+        assert r.n_evaluated <= 200 + 1  # budget accounting
+        validate_structure(ein, arch, r.best_mapping)
+
+
+def test_objective_rejects_unknown_kind(setup):
+    ein, arch = setup
+    r = timeloop_like(ein, arch, budget_evals=20, seed=6)
+    with pytest.raises(ValueError, match="unknown objective kind"):
+        r.objective("power")
+    # the same check fires up front, before any search is spent
+    for fn in (timeloop_like, loma_like, simulated_annealing, evolutionary):
+        with pytest.raises(ValueError, match="unknown objective kind"):
+            fn(ein, arch, budget_evals=10, seed=6, objective="power")
+
+
+def test_all_baselines_deterministic_under_seed(setup):
+    ein, arch = setup
+    for fn, kwargs in ((timeloop_like, {}),
+                       (loma_like, {"lpf_limit": 3}),
+                       (simulated_annealing, {}),
+                       (evolutionary, {})):
+        a = fn(ein, arch, budget_evals=150, seed=7, **kwargs)
+        b = fn(ein, arch, budget_evals=150, seed=7, **kwargs)
+        assert a.objective("edp") == b.objective("edp")
+        assert a.n_evaluated == b.n_evaluated
+        assert a.n_valid == b.n_valid
+        assert a.best_mapping == b.best_mapping
+        c = fn(ein, arch, budget_evals=150, seed=8, **kwargs)
+        # different seed must give a different search *trace* (the best
+        # objective may coincide; the valid-sample count rarely does)
+        assert (a.n_valid, a.best_mapping) != (c.n_valid, c.best_mapping) or \
+            a.objective("edp") == c.objective("edp")

@@ -1,0 +1,87 @@
+"""The brute-force oracle itself: enumeration counts, keep_unit_loops
+semantics, and agreement with ``tcm_map`` across objectives.
+
+``core/bruteforce.py`` is the ground truth every optimality test leans on,
+so it gets its own direct coverage: ``_ordered_factorizations`` against the
+closed-form count, ``keep_unit_loops`` True/False parity on affine-free
+einsums (unit loops are semantic no-ops there), and the oracle's optimum
+against TCM on a small grid of einsums x arches x objectives.
+"""
+import pytest
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.bruteforce import (_ordered_factorizations,
+                                   brute_force_optimum)
+from repro.core.einsum import Einsum, TensorSpec, batched_matmul, matmul
+from repro.core.mapper import count_ordered_factorizations, tcm_map
+
+RTOL = 1e-9
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 6, 12, 16, 30])
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_ordered_factorizations_count_matches_closed_form(n, k):
+    tuples = list(_ordered_factorizations(n, k))
+    # every tuple multiplies back to n, no duplicates, count matches the
+    # stars-and-bars closed form prod_p C(e_p + k - 1, k - 1)
+    for t in tuples:
+        assert len(t) == k
+        prod = 1
+        for f in t:
+            prod *= f
+        assert prod == n
+    assert len(set(tuples)) == len(tuples)
+    assert len(tuples) == int(count_ordered_factorizations(n, k))
+
+
+def _toy_arch(cap=16, fan=False):
+    fanouts = ()
+    if fan:
+        fanouts = (SpatialFanout(above_level=1, dims=(2, 2),
+                                 multicast_tensor=("A", None),
+                                 reduce_tensor=(None, "Z")),)
+    return Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                      MemLevel("GLB", cap, 1, 1, 1e9)),
+                fanouts=fanouts, mac_energy=0.5)
+
+
+def test_keep_unit_loops_parity_without_affine_dims():
+    """Unit loops are exact no-ops when no tensor has affine dims: both
+    enumerations must agree on the optimum (False just enumerates less).
+
+    A 2-rank-var matvec: keep_unit_loops=True enumeration is exponential
+    in the var count (every slot permutes every var's loop), so 3-var
+    matmuls already take minutes where this takes a fraction of a second.
+    """
+    ein = Einsum("mv", (TensorSpec("A", ("m", "k")), TensorSpec("x", ("k",)),
+                        TensorSpec("Z", ("m",), is_output=True)),
+                 {"m": 4, "k": 3})
+    arch = _toy_arch()
+    full = brute_force_optimum(ein, arch, keep_unit_loops=True)
+    slim = brute_force_optimum(ein, arch, keep_unit_loops=False)
+    assert full is not None and slim is not None
+    assert slim.n_enumerated < full.n_enumerated
+    assert slim.result.edp == pytest.approx(full.result.edp, rel=RTOL)
+    assert slim.result.energy == pytest.approx(full.result.energy, rel=RTOL)
+    assert slim.result.latency == pytest.approx(full.result.latency,
+                                                rel=RTOL)
+
+
+@pytest.mark.parametrize("objective", ["edp", "energy", "latency"])
+@pytest.mark.parametrize("ein", [matmul("mm", 4, 3, 2),
+                                 matmul("mm2", 6, 2, 2),
+                                 batched_matmul("bmm", 2, 2, 3, 2)],
+                         ids=lambda e: e.name)
+@pytest.mark.parametrize("fan", [False, True], ids=["flat", "fanout"])
+def test_oracle_agrees_with_tcm(ein, fan, objective):
+    arch = _toy_arch(cap=16, fan=fan)
+    bf = brute_force_optimum(ein, arch, objective=objective,
+                             keep_unit_loops=False)
+    best, _ = tcm_map(ein, arch, objective=objective)
+    assert (bf is None) == (best is None)
+    if bf is None:
+        return
+    bf_obj = {"edp": bf.result.edp, "energy": bf.result.energy,
+              "latency": bf.result.latency}[objective]
+    assert best.objective(objective) == pytest.approx(bf_obj, rel=RTOL)
+    assert bf.n_valid > 0

@@ -1,0 +1,70 @@
+"""Fused-group soundness: random joint-mapspace samples vs ``tcm_map_group``.
+
+The fused gym samples the *joint* mapspace of the QK -> AV smoke pair (the
+same workload the perf-smoke benchmark gates) through the same
+``FusedTileShapeModel`` the group search optimizes, so any sample landing
+strictly below the returned optimum indicts the ``_FusedStepper`` pruning
+directly.
+"""
+import random
+
+import pytest
+
+from repro.core.einsum import batched_matmul
+from repro.core.fusion import FusedWorkload, GroupEdge
+from repro.core.mapper import tcm_map, tcm_map_group
+from repro.core.presets import tpu_v4i_like
+from repro.gap import FusedMapspaceGym
+
+REL_EPS = 1e-9
+
+
+@pytest.fixture(scope="module")
+def fused_setup():
+    qk = batched_matmul("fqk", 8, 4, 32, 64)
+    av = batched_matmul("fav", 8, 4, 64, 32)
+    group = FusedWorkload("qk+av", (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+    arch = tpu_v4i_like()
+    # seed the group search with the independent-sum bound (exactly what
+    # the perf-smoke benchmark does) — same optimum, much less expansion
+    bq, _ = tcm_map(qk, arch)
+    ba, _ = tcm_map(av, arch)
+    fused, _ = tcm_map_group(
+        group, arch,
+        inc_obj=(bq.energy + ba.energy) * (bq.latency + ba.latency))
+    assert fused is not None
+    return group, arch, fused
+
+
+def test_fused_random_samples_never_beat_group_optimum(fused_setup):
+    group, arch, fused = fused_setup
+    gym = FusedMapspaceGym(group, arch)
+    rng = random.Random(0)
+    n_valid = 0
+    for _ in range(200):
+        p = gym.random_point(rng)
+        if p is None:
+            continue
+        res = gym.evaluate(p)
+        if not res.valid:
+            continue
+        n_valid += 1
+        assert res.edp >= fused.edp * (1 - REL_EPS), \
+            "a random joint mapping beat tcm_map_group — fused pruning bug"
+    # the sampler must actually exercise the space, not vacuously pass
+    assert n_valid >= 50, f"only {n_valid}/200 sampled points were valid"
+
+
+def test_fused_gym_counts_and_determinism(fused_setup):
+    group, arch, _ = fused_setup
+    a = FusedMapspaceGym(group, arch)
+    b = FusedMapspaceGym(group, arch)
+    assert len(a.units) == len(b.units) > 0
+    pa = a.random_point(random.Random(3))
+    pb = b.random_point(random.Random(3))
+    assert pa == pb
+    ra = a.evaluate(pa)
+    rb = b.evaluate(pb)
+    assert (ra.energy, ra.latency, ra.valid) == (rb.energy, rb.latency,
+                                                 rb.valid)
+    assert a.n_evals == 1
