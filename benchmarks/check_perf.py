@@ -10,7 +10,10 @@ Compares the perf-smoke record against the committed reference
     ``max_time_regression`` (2x) over the committed reference time, or
   * its serial ``n_expanded`` grows beyond a small tolerance (exploration is
     deterministic on the serial backend, so a jump means lost prune power —
-    that is the regression wall-time noise cannot excuse).
+    that is the regression wall-time noise cannot excuse), or
+  * the traced QK run (live ``repro.obs.Tracer``) exceeds
+    ``max_trace_overhead_ratio`` of the untraced wall time, or its
+    deterministic serial event count drifts from ``qk_trace_events``.
 
 The committed reference time is deliberately generous (several times a warm
 dev-container run) so the 2x gate trips on algorithmic regressions, not on
@@ -46,6 +49,27 @@ def main(argv) -> int:
         failures.append(
             f"QK n_expanded {perf['qk_n_expanded']} > {limit_n:.0f} "
             f"(reference {ref['qk_n_expanded']}) — prune power lost")
+
+    # traced QK run: tracing must stay near-free (the ratio comes from
+    # interleaved min-of-3 runs in the same process, so it is insulated
+    # from runner speed) and the serial event count is deterministic —
+    # a change means the instrumentation itself changed (update the
+    # reference if intentional)
+    tlimit = None
+    if "max_trace_overhead_ratio" in ref and "qk_trace_overhead" in perf:
+        tlimit = ref["max_trace_overhead_ratio"]
+        if perf["qk_trace_overhead"] > tlimit:
+            failures.append(
+                f"traced QK overhead {perf['qk_trace_overhead']}x > "
+                f"{tlimit}x ({perf['qk_traced_s']}s traced vs "
+                f"{perf['qk_search_s']}s untraced) — tracing is no "
+                f"longer near-free")
+        if perf.get("qk_trace_events") != ref["qk_trace_events"]:
+            failures.append(
+                f"traced QK event count {perf.get('qk_trace_events')} != "
+                f"{ref['qk_trace_events']} (serial traces are "
+                f"deterministic; update perf_reference.json if the "
+                f"instrumentation changed intentionally)")
 
     # fused QK->AV joint search (same two gates, when the record has it)
     flimit_s = flimit_n = None
@@ -94,6 +118,10 @@ def main(argv) -> int:
         msg = (f"perf ok: QK search {perf['qk_search_s']}s "
                f"(limit {limit_s}s), n_expanded {perf['qk_n_expanded']} "
                f"(limit {limit_n:.0f})")
+        if tlimit is not None:
+            msg += (f"; traced {perf['qk_traced_s']}s = "
+                    f"{perf['qk_trace_overhead']}x (limit {tlimit}x), "
+                    f"{perf['qk_trace_events']} events")
         if flimit_s is not None:
             msg += (f"; fused QK+AV {perf['fused_qkav_s']}s "
                     f"(limit {flimit_s}s), n_expanded "

@@ -25,7 +25,7 @@ import sys
 import time
 
 
-def perf_smoke() -> dict:
+def perf_smoke(trace_path=None) -> dict:
     """Measure the default QK search + a cheap shared-vs-unshared ratio.
 
     The QK numbers gate CI (check_perf.py): ``qk_search_s`` against a
@@ -35,6 +35,15 @@ def perf_smoke() -> dict:
     ``n_expanded`` depends on worker scheduling and the gate would flake).
     P0 is small enough to run the unshared search too, giving a CI-cheap
     bound-propagation speedup ratio.
+
+    The QK search is also re-run with a live ``repro.obs.Tracer``
+    (interleaved with the untraced runs, min-of-3 each, so the overhead
+    ratio is robust to CI scheduler noise).  This gates the tracing
+    contract: the traced run must return a bit-identical optimum and
+    counter stats, its wall-time overhead must stay under
+    ``max_trace_overhead_ratio``, and its serial event count is
+    deterministic (``qk_trace_events``).  ``trace_path`` saves the last
+    traced run's event stream (the CI trace artifact).
     """
     from repro.core.einsum import batched_matmul
     from repro.core.fusion import FusedWorkload, GroupEdge
@@ -42,12 +51,36 @@ def perf_smoke() -> dict:
     from repro.core.presets import (nvdla_like, small_matmul_suite,
                                     tpu_v4i_like)
     from repro.core.search import clear_caches
+    from repro.obs import Tracer
 
     suite = small_matmul_suite()
-    clear_caches()
-    t0 = time.perf_counter()
-    best, stats = tcm_map(suite["QK"], tpu_v4i_like())
-    qk_s = time.perf_counter() - t0
+    qk_walls, qk_traced_walls = [], []
+    best = stats = tracer = None
+    for _ in range(3):
+        clear_caches()
+        t0 = time.perf_counter()
+        best, stats = tcm_map(suite["QK"], tpu_v4i_like())
+        qk_walls.append(time.perf_counter() - t0)
+
+        tracer = Tracer()
+        clear_caches()
+        t0 = time.perf_counter()
+        best_t, stats_t = tcm_map(suite["QK"], tpu_v4i_like(), tracer=tracer)
+        qk_traced_walls.append(time.perf_counter() - t0)
+        assert (best_t.energy, best_t.latency, best_t.edp) == \
+            (best.energy, best.latency, best.edp), \
+            "tracing changed the QK optimum"
+        d_u = {k: v for k, v in stats.to_dict().items()
+               if not k.startswith("t_")}
+        d_t = {k: v for k, v in stats_t.to_dict().items()
+               if not k.startswith("t_")}
+        assert d_t == d_u, f"tracing changed MapperStats: {d_t} != {d_u}"
+    qk_s = min(qk_walls)
+    qk_traced_s = min(qk_traced_walls)
+    if trace_path:
+        tracer.save(trace_path)
+        print(f"# wrote trace {trace_path} ({len(tracer.events)} events)",
+              file=sys.stderr)
 
     arch = nvdla_like()
     clear_caches()
@@ -99,6 +132,10 @@ def perf_smoke() -> dict:
         "qk_search_s": round(qk_s, 3),
         "qk_n_expanded": stats.n_expanded,
         "qk_edp": best.edp,
+        "qk_traced_s": round(qk_traced_s, 3),
+        "qk_trace_overhead": round(qk_traced_s / max(qk_s, 1e-9), 3),
+        "qk_trace_events": len(tracer.events),
+        "qk_stats": stats.to_dict(),
         "p0_unshared_s": round(p0_unshared_s, 3),
         "p0_shared_s": round(p0_shared_s, 3),
         "p0_bnb_speedup": round(p0_unshared_s / max(p0_shared_s, 1e-9), 2),
@@ -115,7 +152,10 @@ def perf_smoke() -> dict:
         "dse_best_edp": dse.best.objective,
     }
     print(f"# perf-smoke: QK search {qk_s:.2f}s "
-          f"(n_expanded={stats.n_expanded}), "
+          f"(n_expanded={stats.n_expanded}, "
+          f"traced {qk_traced_s:.2f}s = "
+          f"{perf['qk_trace_overhead']}x, "
+          f"{perf['qk_trace_events']} events), "
           f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x, "
           f"fused QK+AV {fused_s:.2f}s "
           f"(n_expanded={f_stats.n_expanded}), "
@@ -141,13 +181,18 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="perf smoke only: default QK search + a cheap "
                     "shared-vs-unshared ratio (what CI runs)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="--fast only: save the traced QK smoke run's "
+                    "event stream (*.jsonl raw log, else Chrome-trace "
+                    "JSON; inspect with python -m repro.obs report PATH)")
     args = ap.parse_args()
 
     record = {"schema": 1, "scale": args.scale, "workers": args.workers,
               "fast": args.fast, "benchmarks": {}, "perf": {}}
 
     if args.fast:
-        record["perf"] = perf_smoke()  # gated metrics are serial-only
+        # gated metrics are serial-only
+        record["perf"] = perf_smoke(trace_path=args.trace)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(record, f, indent=2)

@@ -17,8 +17,10 @@ from __future__ import annotations
 
 import math
 import time
+from contextlib import nullcontext
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs.tracer import active
 from .arch import Arch
 from .dataflow import count_unpruned_dataflows, make_slots
 from .einsum import Einsum
@@ -131,6 +133,7 @@ def tcm_map(
     workers: Optional[int] = None,
     share_incumbents: bool = True,
     inc_obj: float = float("inf"),
+    tracer=None,
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Find the optimal mapping of ``einsum`` on ``arch``.
 
@@ -158,12 +161,22 @@ def tcm_map(
     is strictly below ``inc_obj`` it is the true optimum; a ``None`` result
     (or one at/above the bound) only proves the true optimum is no better
     than ``inc_obj`` — callers that seed must fall back accordingly.
+
+    ``tracer`` (a ``repro.obs`` tracer, or ``None``) records the full span
+    hierarchy of this call — enumeration, seed/search phases, per-unit
+    explorations with prune attribution, incumbent tightenings — without
+    changing any result: with tracing off (the default) optima and stats
+    are bit-identical to the untraced search.
     """
+    tracer = active(tracer)
     stats = MapperStats()
     t0 = time.perf_counter()
+    t_wall = time.time() if tracer is not None else 0.0
 
-    units = build_work_units(einsum, arch, objective, prune_partial,
-                             collect_sizes, stats)
+    with (tracer.span("enumerate", cat="phase", einsum=einsum.name)
+          if tracer is not None else nullcontext()):
+        units = build_work_units(einsum, arch, objective, prune_partial,
+                                 collect_sizes, stats)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
@@ -176,7 +189,7 @@ def tcm_map(
     best: Optional[MappingResult] = None
     try:
         best = _run_and_merge(units, objective, engine, stats,
-                              inc_obj=inc_obj)
+                              inc_obj=inc_obj, tracer=tracer)
     finally:
         # engines passed in by the caller stay open (netmap reuses one pool
         # across a whole model's searches); self-made ones are torn down
@@ -190,12 +203,20 @@ def tcm_map(
 
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete(
+            f"tcm_map:{einsum.name}", t_wall, cat="driver",
+            backend=engine.backend, n_units=len(units),
+            objective_kind=objective,
+            objective=best.objective(objective) if best else None,
+            n_expanded=stats.n_expanded)
     return best, stats
 
 
 def _run_and_merge(units, objective: str, engine: SearchEngine,
                    stats: MapperStats,
-                   inc_obj: float = float("inf")) -> Optional[MappingResult]:
+                   inc_obj: float = float("inf"),
+                   tracer=None) -> Optional[MappingResult]:
     """Dispatch units through ``engine`` and reduce in enumeration order.
 
     The strict ``<`` comparison in unit order is the bit-parity contract:
@@ -203,7 +224,7 @@ def _run_and_merge(units, objective: str, engine: SearchEngine,
     identical serial or parallel.
     """
     best: Optional[MappingResult] = None
-    for r in engine.run(units, inc_obj):
+    for r in engine.run(units, inc_obj, tracer=tracer):
         stats.merge(r.stats)
         c = r.candidate
         if c is not None and (
@@ -223,6 +244,7 @@ def tcm_map_best_arch(
     workers: Optional[int] = None,
     share_incumbents: bool = True,
     inc_obj: float = float("inf"),
+    tracer=None,
 ) -> Tuple[int, Optional[MappingResult], MapperStats]:
     """Find the best (architecture, mapping) pair for ``einsum`` over a
     batch of candidate architectures in ONE engine dispatch.
@@ -241,16 +263,21 @@ def tcm_map_best_arch(
     Returns ``(best_arch_index, result, merged_stats)``; the index is -1
     and the result None when no candidate admits a valid mapping.
     """
+    tracer = active(tracer)
     stats = MapperStats()
     t0 = time.perf_counter()
+    t_wall = time.time() if tracer is not None else 0.0
     units: List[WorkUnit] = []
     spans: List[int] = []  # spans[i] = first unit index of arch i
-    for arch in arches:
-        spans.append(len(units))
-        per = MapperStats()
-        units += build_work_units(einsum, arch, objective, prune_partial,
-                                  False, per, index_base=len(units))
-        stats.merge(per)
+    with (tracer.span("enumerate", cat="phase", einsum=einsum.name,
+                      n_arches=len(arches))
+          if tracer is not None else nullcontext()):
+        for arch in arches:
+            spans.append(len(units))
+            per = MapperStats()
+            units += build_work_units(einsum, arch, objective, prune_partial,
+                                      False, per, index_base=len(units))
+            stats.merge(per)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
@@ -259,7 +286,7 @@ def tcm_map_best_arch(
     best: Optional[MappingResult] = None
     best_arch = -1
     try:
-        for r in engine.run(units, inc_obj):
+        for r in engine.run(units, inc_obj, tracer=tracer):
             stats.merge(r.stats)
             c = r.candidate
             if c is not None and (
@@ -275,6 +302,14 @@ def tcm_map_best_arch(
         validate_structure(einsum, arches[best_arch], best.mapping)
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete(
+            f"tcm_map_best_arch:{einsum.name}", t_wall, cat="driver",
+            backend=engine.backend, n_units=len(units),
+            n_arches=len(arches), best_arch=best_arch,
+            objective_kind=objective,
+            objective=best.objective(objective) if best else None,
+            n_expanded=stats.n_expanded)
     return best_arch, best, stats
 
 
@@ -290,6 +325,7 @@ def tcm_map_group(
     share_incumbents: bool = True,
     max_units: Optional[int] = 4096,
     inc_obj: float = float("inf"),
+    tracer=None,
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Jointly map a fusion group: intermediates pinned on-chip, shared
     rank classes co-tiled, every (pin level, member dataplacement, member
@@ -310,17 +346,25 @@ def tcm_map_group(
     value is found exactly (identical serial or parallel); otherwise the
     caller's fallback semantics apply regardless of what survives.
     """
+    tracer = active(tracer)
     stats = MapperStats()
     t0 = time.perf_counter()
+    t_wall = time.time() if tracer is not None else 0.0
 
     t = time.perf_counter()
-    skeletons = enumerate_fused_skeletons(workload, arch,
-                                          max_units=max_units)
+    with (tracer.span("enumerate", cat="phase", group=workload.name)
+          if tracer is not None else nullcontext()):
+        skeletons = enumerate_fused_skeletons(workload, arch,
+                                              max_units=max_units)
     stats.t_dataflow = time.perf_counter() - t
     stats.n_skeletons = len(skeletons)
     if not skeletons:
         stats.finalize()
         stats.t_total = time.perf_counter() - t0
+        if tracer is not None:
+            tracer.complete(f"tcm_map_group:{workload.name}", t_wall,
+                            cat="driver", n_units=0, objective=None,
+                            objective_kind=objective, n_expanded=0)
         return None, stats
 
     units = [WorkUnit(i, workload, arch, sk, objective, prune_partial)
@@ -336,7 +380,7 @@ def tcm_map_group(
     best: Optional[MappingResult] = None
     try:
         best = _run_and_merge(units, objective, engine, stats,
-                              inc_obj=inc_obj)
+                              inc_obj=inc_obj, tracer=tracer)
     finally:
         if owns_engine:
             engine.close()
@@ -348,4 +392,11 @@ def tcm_map_group(
 
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete(
+            f"tcm_map_group:{workload.name}", t_wall, cat="driver",
+            backend=engine.backend, n_units=len(units),
+            objective_kind=objective,
+            objective=best.objective(objective) if best else None,
+            n_expanded=stats.n_expanded)
     return best, stats

@@ -46,10 +46,13 @@ import multiprocessing as mp
 import os
 import time
 from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
-from dataclasses import dataclass, field
+from contextlib import nullcontext
+from dataclasses import asdict, dataclass, field, fields
 from functools import lru_cache
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
+from ..obs.tracer import Tracer, active
 from .arch import Arch
 from .dataflow import enumerate_skeletons
 from .dataplacement import Dataplacement, enumerate_dataplacements
@@ -116,6 +119,16 @@ class MapperStats:
         self.sum_df_pruned += other.sum_df_pruned
         self.sum_loop_pruned += other.sum_loop_pruned
 
+    def to_dict(self) -> Dict[str, Any]:
+        """Canonical JSON-safe serialization.
+
+        The single wire format for every consumer of stats — benchmark
+        ``--json`` payloads, ``repro.dse`` reports, netmap cache records —
+        so field additions propagate everywhere at once.  Inverse:
+        :func:`stats_from_dict`.
+        """
+        return asdict(self)
+
     def finalize(self) -> None:
         """Convert linear accumulators to the published log10 fields."""
         self.log10_total = math.log10(max(self.sum_total, 1e-300)) + 300
@@ -128,6 +141,16 @@ class MapperStats:
         # evaluations (the paper counts tile-shape-only model invocations the
         # same way).
         self.log10_evaluated = math.log10(max(self.n_expanded, 1))
+
+
+_STATS_FIELDS = frozenset(f.name for f in fields(MapperStats))
+
+
+def stats_from_dict(d: Dict[str, Any]) -> MapperStats:
+    """Rebuild a :class:`MapperStats` from :meth:`MapperStats.to_dict`
+    output, tolerating unknown keys (cache records written by newer or
+    older versions round-trip on the shared field set)."""
+    return MapperStats(**{k: v for k, v in d.items() if k in _STATS_FIELDS})
 
 
 @dataclass
@@ -260,11 +283,19 @@ class WorkUnit:
 
 @dataclass
 class WorkResult:
-    """Picklable outcome of one work unit: local optimum + partial stats."""
+    """Picklable outcome of one work unit: local optimum + partial stats.
+
+    ``events`` carries the worker-side trace buffer when the run is traced
+    (pool workers cannot write to the driver's tracer); the engine folds the
+    buffers into the master tracer *in unit order* and resets the field, so
+    the merged stream layout is deterministic regardless of worker
+    scheduling.  ``None`` on untraced runs.
+    """
 
     index: int
     candidate: Optional[MappingResult]
     stats: MapperStats
+    events: Optional[List[dict]] = None
 
 
 def run_seed_unit(unit: WorkUnit) -> Tuple[int, float, float, float]:
@@ -288,9 +319,44 @@ def run_seed_unit(unit: WorkUnit) -> Tuple[int, float, float, float]:
     return (unit.index, obj, t_curry, time.perf_counter() - t)
 
 
+def _trace_unit(tracer: Tracer, unit: WorkUnit, t0: float,
+                stats: MapperStats, candidate: Optional[MappingResult],
+                step_buf: Tracer) -> None:
+    """Record one finished work unit on ``tracer``.
+
+    Step samples are adopted only when the unit produced a mapping: units
+    whose exploration yields no complete mapping do not contribute to
+    ``MapperStats`` (historical contract, see :func:`run_work_unit`), and
+    the trace keeps the same accounting so the summed per-step prune
+    attribution equals the merged ``n_pruned_*`` counters exactly.  The
+    unit span still records such units (``no_mapping`` + how many step
+    samples were dropped), so dead skeletons stay visible in the profile.
+    """
+    args: Dict[str, Any] = {
+        "index": unit.index,
+        "einsum": getattr(unit.einsum, "name", None)
+        or unit.einsum.__class__.__name__,
+        "n_expanded": stats.n_expanded,
+        "pruned_dominated": stats.n_pruned_dominated,
+        "pruned_bound": stats.n_pruned_bound,
+        "pruned_invalid": stats.n_pruned_invalid,
+    }
+    if candidate is None:
+        args["no_mapping"] = True
+        args["steps_dropped"] = len(step_buf.events)
+    else:
+        args["objective"] = candidate.objective(unit.objective)
+        args["energy"] = candidate.energy
+        args["latency"] = candidate.latency
+        args["edp"] = candidate.edp
+        tracer.extend(step_buf.events)
+    tracer.complete(f"unit[{unit.index}]", t0, cat="unit", **args)
+
+
 def run_work_unit(unit: WorkUnit,
                   inc_obj: float = float("inf"),
                   inc_reader: Optional[Callable[[], float]] = None,
+                  tracer: Optional[Tracer] = None,
                   ) -> WorkResult:
     """Curry the model, explore tile shapes, return the unit's optimum.
 
@@ -301,18 +367,28 @@ def run_work_unit(unit: WorkUnit,
     every multiprocessing start method.  Mirrors the historical driver loop
     exactly: stats of skeletons whose exploration yields no mapping are not
     accumulated.
+
+    ``tracer`` (an *enabled* tracer or ``None``) records a per-unit span
+    plus the unit's sampled step events; tracing is observational only, so
+    results and stats are bit-identical either way.
     """
+    t_wall = time.time() if tracer is not None else 0.0
     stats = MapperStats()
     t = time.perf_counter()
     cm = cached_curried_model(unit.einsum, unit.arch, unit.skeleton)
     stats.t_curry = time.perf_counter() - t
 
+    # step samples land in a private buffer so no-result units can drop
+    # them (see _trace_unit) without rewinding the master tracer
+    step_buf = Tracer() if tracer is not None else None
     t = time.perf_counter()
     res = explore(cm, objective=unit.objective,
                   prune_partial=unit.prune_partial,
-                  inc_obj=inc_obj, inc_reader=inc_reader)
+                  inc_obj=inc_obj, inc_reader=inc_reader, tracer=step_buf)
     stats.t_tileshape = time.perf_counter() - t
     if res is None:
+        if tracer is not None:
+            _trace_unit(tracer, unit, t_wall, stats, None, step_buf)
         return WorkResult(unit.index, None, stats)
     stats.n_final_evals = res.stats.n_final
     stats.n_expanded = res.stats.n_expanded
@@ -321,7 +397,24 @@ def run_work_unit(unit: WorkUnit,
     stats.n_pruned_bound = res.stats.n_pruned_bound
     candidate = MappingResult(cm.concretize(res.bounds),
                               res.energy, res.latency, res.edp)
+    if tracer is not None:
+        _trace_unit(tracer, unit, t_wall, stats, candidate, step_buf)
     return WorkResult(unit.index, candidate, stats)
+
+
+def run_work_unit_traced(unit: WorkUnit,
+                         inc_obj: float = float("inf")) -> WorkResult:
+    """Pool task: run one unit with a fresh worker-side trace buffer.
+
+    Workers cannot append to the driver's tracer, so each traced unit
+    records into its own :class:`~repro.obs.tracer.Tracer` and ships the
+    events back inside the picklable :class:`WorkResult`; the engine merges
+    buffers in unit order.  Module-level so ``executor.map`` can pickle it.
+    """
+    tr = Tracer()
+    r = run_work_unit(unit, inc_obj=inc_obj, tracer=tr)
+    r.events = tr.events
+    return r
 
 
 # --------------------------------------------------------------------------
@@ -346,12 +439,19 @@ class SearchEngine:
     share_incumbents = True
 
     def run(self, units: Sequence[WorkUnit],
-            inc_obj: float = float("inf")) -> List[WorkResult]:
+            inc_obj: float = float("inf"),
+            tracer=None) -> List[WorkResult]:
         """Execute ``units``; ``inc_obj`` optionally seeds the incumbent
         with an externally known objective bound (e.g. a fusion group's
         independent-mapping sum — candidates provably no better than the
         fallback need not be explored).  With the default ``inf`` this is
-        exactly the historical search."""
+        exactly the historical search.
+
+        ``tracer`` (any tracer or ``None``) records phase spans (seed /
+        search), per-unit spans with prune attribution, and incumbent
+        tightenings; worker-side buffers are merged in unit order so the
+        event stream layout is deterministic.  Tracing never changes
+        results."""
         raise NotImplementedError
 
     def close(self) -> None:
@@ -381,24 +481,45 @@ class SerialEngine(SearchEngine):
         self.share_incumbents = share_incumbents
 
     def run(self, units: Sequence[WorkUnit],
-            inc_obj: float = float("inf")) -> List[WorkResult]:
+            inc_obj: float = float("inf"),
+            tracer=None) -> List[WorkResult]:
+        tracer = active(tracer)
         if not (self.share_incumbents and self._sharing_applies(units)):
-            return [run_work_unit(u, inc_obj=inc_obj) for u in units]
+            with (tracer.span("search", cat="phase", n_units=len(units),
+                              backend=self.backend)
+                  if tracer is not None else nullcontext()):
+                return [run_work_unit(u, inc_obj=inc_obj, tracer=tracer)
+                        for u in units]
         inc = inc_obj
         t_seed: Dict[int, Tuple[float, float]] = {}
-        for u in units:
-            i, obj, t_curry, t_dive = run_seed_unit(u)
-            t_seed[i] = (t_curry, t_dive)
-            inc = min(inc, obj)
+        with (tracer.span("seed", cat="phase", n_units=len(units),
+                          backend=self.backend)
+              if tracer is not None else nullcontext()):
+            for u in units:
+                i, obj, t_curry, t_dive = run_seed_unit(u)
+                t_seed[i] = (t_curry, t_dive)
+                inc = min(inc, obj)
+        if tracer is not None and inc != float("inf"):
+            tracer.instant("seeded", cat="incumbent", objective=inc,
+                           source="beam-dive")
         results = []
-        for u in units:
-            r = run_work_unit(u, inc_obj=inc)
-            t_curry, t_dive = t_seed.get(u.index, (0.0, 0.0))
-            r.stats.t_curry += t_curry
-            r.stats.t_tileshape += t_dive
-            if r.candidate is not None:
-                inc = min(inc, r.candidate.objective(u.objective))
-            results.append(r)
+        with (tracer.span("search", cat="phase", n_units=len(units),
+                          backend=self.backend)
+              if tracer is not None else nullcontext()):
+            for u in units:
+                r = run_work_unit(u, inc_obj=inc, tracer=tracer)
+                t_curry, t_dive = t_seed.get(u.index, (0.0, 0.0))
+                r.stats.t_curry += t_curry
+                r.stats.t_tileshape += t_dive
+                if r.candidate is not None:
+                    obj = r.candidate.objective(u.objective)
+                    if obj < inc:
+                        inc = obj
+                        if tracer is not None:
+                            tracer.instant("tighten", cat="incumbent",
+                                           objective=obj,
+                                           source=f"unit[{u.index}]")
+                results.append(r)
         return results
 
 
@@ -418,31 +539,64 @@ def _init_worker(shared) -> None:
     _WORKER_INCUMBENT = shared
 
 
-def _tighten_shared(shared, obj: float) -> None:
-    """Monotonically tighten the shared bound (compare-and-set under lock)."""
+def _tighten_shared(shared, obj: float) -> bool:
+    """Monotonically tighten the shared bound (compare-and-set under lock).
+
+    Returns whether ``obj`` actually improved the published bound, so
+    traced workers emit incumbent instants only for real tightenings.
+    """
     with shared.get_lock():
         if obj < shared.value:
             shared.value = obj
+            return True
+    return False
 
 
 def _read_shared() -> float:
     return _WORKER_INCUMBENT.value
 
 
-def run_work_unit_shared(unit: WorkUnit) -> WorkResult:
+def run_work_unit_shared(unit: WorkUnit, trace: bool = False) -> WorkResult:
     """Phase-2 worker task: explore against the shared global incumbent.
 
     The initial bound and the per-B&B-step re-reads come from the shared
     ``Value``; a finished unit with a complete mapping publishes its
-    objective so in-flight and queued units prune against it.
+    objective so in-flight and queued units prune against it.  With
+    ``trace`` the unit records into a fresh worker-side buffer shipped back
+    in ``WorkResult.events`` (see :func:`run_work_unit_traced`).
     """
+    tr = Tracer() if trace else None
     shared = _WORKER_INCUMBENT
     if shared is None:  # engine without sharing: plain unit
-        return run_work_unit(unit)
-    r = run_work_unit(unit, inc_obj=shared.value, inc_reader=_read_shared)
-    if r.candidate is not None:
-        _tighten_shared(shared, r.candidate.objective(unit.objective))
+        r = run_work_unit(unit, tracer=tr)
+    else:
+        r = run_work_unit(unit, inc_obj=shared.value,
+                          inc_reader=_read_shared, tracer=tr)
+        if r.candidate is not None:
+            obj = r.candidate.objective(unit.objective)
+            if _tighten_shared(shared, obj) and tr is not None:
+                tr.instant("tighten", cat="incumbent", objective=obj,
+                           source=f"unit[{unit.index}]")
+    if tr is not None:
+        r.events = tr.events
     return r
+
+
+def _merge_worker_events(tracer: Optional[Tracer],
+                         results: Sequence[WorkResult]) -> None:
+    """Fold worker-side event buffers into the driver tracer.
+
+    ``results`` follows the units sequence (``executor.map`` preserves
+    ordering), so the merged stream layout is deterministic regardless of
+    which worker ran which unit or when; chronology is recovered at export
+    time from the wall-clock timestamps.  Buffers are detached after the
+    merge so results do not carry duplicate event payloads downstream.
+    """
+    if tracer is None:
+        return
+    for r in results:
+        tracer.extend(r.events)
+        r.events = None
 
 
 def _default_start_method() -> str:
@@ -499,9 +653,12 @@ class ProcessPoolEngine(SearchEngine):
         return self._executor
 
     def run(self, units: Sequence[WorkUnit],
-            inc_obj: float = float("inf")) -> List[WorkResult]:
+            inc_obj: float = float("inf"),
+            tracer=None) -> List[WorkResult]:
+        tracer = active(tracer)
         if self.workers <= 1 or len(units) <= 1:
-            return SerialEngine(self.share_incumbents).run(units, inc_obj)
+            return SerialEngine(self.share_incumbents).run(units, inc_obj,
+                                                           tracer=tracer)
         # Unit costs are heavily skewed (one skeleton can dominate the whole
         # search), so default to dynamic scheduling (chunksize 1); batching
         # only pays off once there are very many units per worker.
@@ -509,28 +666,49 @@ class ProcessPoolEngine(SearchEngine):
         try:
             executor = self._get_executor()
             if not (self.share_incumbents and self._sharing_applies(units)):
-                if inc_obj != float("inf"):
+                if tracer is not None:
+                    fn = functools.partial(run_work_unit_traced,
+                                           inc_obj=inc_obj)
+                elif inc_obj != float("inf"):
                     fn = functools.partial(run_work_unit, inc_obj=inc_obj)
                 else:
                     fn = run_work_unit
-                return list(executor.map(fn, units, chunksize=chunksize))
+                with (tracer.span("search", cat="phase", n_units=len(units),
+                                  backend=self.backend, workers=self.workers)
+                      if tracer is not None else nullcontext()):
+                    results = list(executor.map(fn, units,
+                                                chunksize=chunksize))
+                _merge_worker_events(tracer, results)
+                return results
             # phase 1: beam-dive every unit, seed the shared incumbent.
             # Memoization is per-process, so a phase-2 unit landing on a
             # different worker re-curries and re-dives — the pool trades
             # aggregate CPU seconds for wall time here.
-            seeds = list(executor.map(run_seed_unit, units,
-                                      chunksize=chunksize))
+            with (tracer.span("seed", cat="phase", n_units=len(units),
+                              backend=self.backend, workers=self.workers)
+                  if tracer is not None else nullcontext()):
+                seeds = list(executor.map(run_seed_unit, units,
+                                          chunksize=chunksize))
             with self._shared.get_lock():
                 self._shared.value = min(
                     (s[1] for s in seeds), default=inc_obj)
                 self._shared.value = min(self._shared.value, inc_obj)
+            if tracer is not None and self._shared.value != float("inf"):
+                tracer.instant("seeded", cat="incumbent",
+                               objective=self._shared.value,
+                               source="beam-dive")
             # phase 2: full explorations against the improving global bound
-            results = list(executor.map(run_work_unit_shared, units,
-                                        chunksize=chunksize))
+            fn = (functools.partial(run_work_unit_shared, trace=True)
+                  if tracer is not None else run_work_unit_shared)
+            with (tracer.span("search", cat="phase", n_units=len(units),
+                              backend=self.backend, workers=self.workers)
+                  if tracer is not None else nullcontext()):
+                results = list(executor.map(fn, units, chunksize=chunksize))
             # seeds/results both follow the units sequence order
             for r, (_, _, t_curry, t_dive) in zip(results, seeds):
                 r.stats.t_curry += t_curry
                 r.stats.t_tileshape += t_dive
+            _merge_worker_events(tracer, results)
             return results
         except BrokenExecutor:
             # a dead worker poisons the executor permanently; drop it so the

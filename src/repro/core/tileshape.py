@@ -805,6 +805,7 @@ def explore(cm: CurriedModel, objective: str = "edp",
             debug: bool = False,
             inc_obj: float = float("inf"),
             inc_reader: Optional[Callable[[], float]] = None,
+            tracer=None,
             ) -> Optional[ExploreResult]:
     """Full exploration of one curried model's tile shapes.
 
@@ -818,6 +819,14 @@ def explore(cm: CurriedModel, objective: str = "edp",
     unchanged — a unit whose entire subtree is cut returns its local beam
     incumbent (or None), and the caller's merge keeps the external bound's
     unit as the winner.
+
+    ``tracer`` (an *enabled* :class:`repro.obs.Tracer`, or None) samples the
+    expansion at step granularity: one ``expand`` counter event per explored
+    site with the frontier size and the per-criterion prune attribution
+    (dominance vs bound vs invalid) of that step.  Events are observational
+    only — tracing never changes which candidates survive, so results are
+    bit-identical with tracing on or off; with ``tracer=None`` (the default)
+    the only cost is one identity check per emission site.
     """
     stats = ExploreStats()
     if not cm.sites:
@@ -831,13 +840,31 @@ def explore(cm: CurriedModel, objective: str = "edp",
     cols, rem, fan_rem = st.init_state()
     assigned: List[int] = []
 
+    def _trace_step(step: int, k: int, expanded: int, frontier: int,
+                    p0) -> None:
+        # one sampled event per explored site: this step's expansion count,
+        # surviving frontier, and per-criterion prune attribution (the
+        # deltas sum exactly to the unit's n_pruned_* stats — tested)
+        tracer.counter(
+            "expand", cat="step", step=step, site=st.sites[k].var,
+            spatial=bool(st.sites[k].spatial), expanded=expanded,
+            frontier=frontier,
+            pruned_invalid=stats.n_pruned_invalid - p0[0],
+            pruned_bound=stats.n_pruned_bound - p0[1],
+            pruned_dominated=stats.n_pruned_dominated - p0[2])
+
     for step, k in enumerate(st.explore_order):
+        p0 = (stats.n_pruned_invalid, stats.n_pruned_bound,
+              stats.n_pruned_dominated)
         out = st.expand(k, cols, rem, fan_rem)
         if out is None:
+            if tracer is not None:
+                _trace_step(step, k, 0, 0, p0)
             return _finish(None, incumbent, stats)
         cols, rem, fan_rem = out
         assigned.append(k)
-        stats.n_expanded += cols.shape[0]
+        expanded_here = cols.shape[0]
+        stats.n_expanded += expanded_here
         last_step = step == len(st.explore_order) - 1
         assigned_set = set(assigned)
         known = frozenset(st.sites[i].sym for i in assigned)
@@ -847,6 +874,8 @@ def explore(cm: CurriedModel, objective: str = "edp",
             ok = st.usage_lower_ok(cols, assigned_set)
             stats.n_pruned_invalid += int((~ok).sum())
             if not ok.any():
+                if tracer is not None:
+                    _trace_step(step, k, expanded_here, 0, p0)
                 return _finish(None, incumbent, stats)
             cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
 
@@ -858,6 +887,8 @@ def explore(cm: CurriedModel, objective: str = "edp",
             ok = lb < bound
             stats.n_pruned_bound += int((~ok).sum())
             if not ok.any():
+                if tracer is not None:
+                    _trace_step(step, k, expanded_here, 0, p0)
                 return _finish(None, incumbent, stats)
             cols, rem, fan_rem = cols[ok], rem[ok], fan_rem[ok]
 
@@ -871,6 +902,8 @@ def explore(cm: CurriedModel, objective: str = "edp",
                 stats.n_pruned_dominated += int((~keep).sum())
                 cols, rem, fan_rem = cols[keep], rem[keep], fan_rem[keep]
         stats.max_frontier = max(stats.max_frontier, cols.shape[0])
+        if tracer is not None:
+            _trace_step(step, k, expanded_here, int(cols.shape[0]), p0)
         if debug:
             import time as _t
             print(f"step {step}: site={st.sites[k].var}"

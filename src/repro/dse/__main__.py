@@ -22,6 +22,7 @@ from repro.dse.explore import (check_parity, explore_space,
                                explore_space_network)
 from repro.dse.space import SPACES, get_space, resolve_workload
 from repro.netmap.cache import MappingCache
+from repro.obs import Tracer
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -69,6 +70,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump the full report as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a search trace: *.jsonl for the raw event "
+                    "log, anything else for Chrome-trace JSON (Perfetto); "
+                    "inspect with python -m repro.obs report PATH")
     ap.add_argument("--verbose", action="store_true")
     return ap
 
@@ -95,10 +100,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0 if ok else 1
 
     cache = None if args.no_cache else MappingCache(root=args.cache_dir)
+    tracer = Tracer() if args.trace else None
     common = dict(objective=args.objective, cache=cache,
                   workers=args.workers, max_points=max_points,
                   roofline_order=not args.no_roofline_order,
-                  prune=not args.no_prune, verbose=args.verbose)
+                  prune=not args.no_prune, verbose=args.verbose,
+                  tracer=tracer)
     if args.network is not None:
         from repro.configs import get_config
 
@@ -119,6 +126,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         with open(args.json, "w") as f:
             json.dump(report.to_dict(), f, indent=2)
         print(f"  wrote {args.json}")
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"  wrote trace {args.trace} ({len(tracer.events)} events)")
     return 0
 
 

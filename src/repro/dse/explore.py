@@ -49,7 +49,8 @@ from repro.core.arch import ArchPoint, ArchSpace
 from repro.core.einsum import Einsum
 from repro.core.looptree import render
 from repro.core.mapper import tcm_map
-from repro.core.search import SearchEngine, make_engine
+from repro.core.search import MapperStats, SearchEngine, make_engine
+from repro.obs.tracer import active
 
 from .report import (DSEReport, EVALUATED, INFEASIBLE, PRUNED_BOUND,
                      PRUNED_ROOFLINE, PointRow)
@@ -102,6 +103,7 @@ def explore_space(
     max_points: Optional[int] = None,
     collect_mappings: bool = True,
     verbose: bool = False,
+    tracer=None,
 ) -> DSEReport:
     """Co-search architectures and mappings for a list of einsums.
 
@@ -147,10 +149,13 @@ def explore_space(
                 result, stats = tcm_map(
                     e, point.arch, objective=objective,
                     prune_partial=prune_partial, collect_sizes=False,
-                    engine=engine, inc_obj=t_i)
+                    engine=engine, inc_obj=t_i, tracer=tracer)
                 dt = time.perf_counter() - t0
                 row.t_search += dt
                 row.n_expanded += stats.n_expanded
+                if row.stats is None:
+                    row.stats = MapperStats()
+                row.stats.merge(stats)
                 if result is None and t_i == float("inf"):
                     raise _Infeasible  # nothing cut this: no valid mapping
                 if result is None or result.objective(objective) >= t_i:
@@ -166,13 +171,15 @@ def explore_space(
         row.energy = energy
         row.latency = latency
         row.objective = _combine(energy, latency, objective)
+        if row.stats is not None:
+            row.stats.finalize()
 
     return _sweep(space, workload, objective, evaluate, point_bounds,
                   cache=cache, engine=engine, backend=backend,
                   workers=workers, share_incumbents=share_incumbents,
                   roofline_order=roofline_order, prune=prune,
                   seed_incumbents=seed_incumbents, max_points=max_points,
-                  verbose=verbose)
+                  verbose=verbose, tracer=tracer)
 
 
 def explore_space_network(
@@ -192,6 +199,7 @@ def explore_space_network(
     prune: bool = True,
     max_points: Optional[int] = None,
     verbose: bool = False,
+    tracer=None,
 ) -> DSEReport:
     """Sweep a space against a whole model config via ``netmap``.
 
@@ -215,7 +223,8 @@ def explore_space_network(
         try:
             rep = map_network(cfg, point.arch, objective=objective,
                               mode=mode, batch=batch, seq=seq, cache=cache,
-                              engine=engine, fuse=fuse, verbose=False)
+                              engine=engine, fuse=fuse, verbose=False,
+                              tracer=tracer)
         except NoValidMappingError:
             # exactly the planner's infeasibility signal — engine/pool
             # RuntimeErrors (e.g. BrokenProcessPool) propagate and abort
@@ -236,13 +245,16 @@ def explore_space_network(
                   workers=workers, share_incumbents=share_incumbents,
                   roofline_order=roofline_order, prune=prune,
                   seed_incumbents=False,  # map_network has no seeding hook
-                  max_points=max_points, verbose=verbose)
+                  max_points=max_points, verbose=verbose, tracer=tracer)
 
 
 def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
            engine, backend, workers, share_incumbents, roofline_order,
-           prune, seed_incumbents, max_points, verbose) -> DSEReport:
+           prune, seed_incumbents, max_points, verbose,
+           tracer=None) -> DSEReport:
+    tracer = active(tracer)
     t0 = time.perf_counter()
+    t_wall0 = time.time() if tracer is not None else 0.0
     points, counters = space.materialize(max_points=max_points)
     report = DSEReport(space=space.name, workload=workload,
                        objective=objective, **counters)
@@ -272,12 +284,18 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
             if prune and _dominated_by_evaluated(row, evaluated):
                 row.status = PRUNED_ROOFLINE
                 report.n_pruned_roofline += 1
+                if tracer is not None:
+                    tracer.instant("pruned_roofline", cat="dse",
+                                   point=row.coords or row.name,
+                                   obj_lb=row.obj_lb,
+                                   area_mm2=row.area_mm2)
                 if verbose:
                     print(f"  {row.coords:<44} pruned (roofline floor "
                           f">{row.obj_lb:.3g} dominated)")
                 continue
             threshold = (_seed_threshold(row, evaluated)
                          if seed_incumbents else float("inf"))
+            t_point = time.time() if tracer is not None else 0.0
             try:
                 evaluate(point, row, threshold, engine)
             except (_Cut, _Infeasible) as stop:
@@ -292,6 +310,13 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
                 # PointRow contract: mappings on evaluated points only)
                 report.t_search += row.t_search
                 row.mappings.clear()
+                if tracer is not None:
+                    tracer.instant(row.status, cat="dse",
+                                   point=row.coords or row.name,
+                                   threshold=threshold)
+                    tracer.complete(f"point:{row.coords or row.name}",
+                                    t_point, cat="dse", status=row.status,
+                                    n_expanded=row.n_expanded)
                 if verbose:
                     what = ("no valid mapping"
                             if isinstance(stop, _Infeasible) else
@@ -302,6 +327,15 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
             evaluated.append(row)
             report.n_evaluated += 1
             report.t_search += row.t_search
+            if tracer is not None:
+                tracer.instant("evaluated", cat="dse",
+                               point=row.coords or row.name,
+                               objective=row.objective,
+                               area_mm2=row.area_mm2, cached=row.cached)
+                tracer.complete(f"point:{row.coords or row.name}", t_point,
+                                cat="dse", status=row.status,
+                                objective=row.objective,
+                                n_expanded=row.n_expanded)
             if verbose:
                 print(f"  {row.coords:<44} {objective}="
                       f"{row.objective:.4g} area={row.area_mm2:.2f}mm2 "
@@ -316,6 +350,15 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
         report.cache_misses = cache.misses - misses0
     report.finalize_frontier()
     report.t_total = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete(
+            f"explore_space:{space.name}", t_wall0, cat="driver",
+            backend=engine.backend, workload=workload,
+            n_points=report.n_points, n_evaluated=report.n_evaluated,
+            n_pruned_roofline=report.n_pruned_roofline,
+            n_pruned_bound=report.n_pruned_bound,
+            n_expanded=report.n_expanded,
+            best=report.best.name if report.best else None)
     return report
 
 

@@ -12,6 +12,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.search import MapperStats
+
 # Point row statuses, in lifecycle order.  Statuses record what the sweep
 # *proved*, not ground truth: a point cut under a finite seed threshold is
 # "pruned_bound" (provably no better than an evaluated point) even when it
@@ -62,6 +64,10 @@ class PointRow:
     cached: int = 0  # per-einsum cache hits composing this point
     n_expanded: int = 0
     t_search: float = 0.0
+    # merged MapperStats of this point's cold searches (None when every
+    # search was served from cache or none ran); like n_expanded/t_search,
+    # work done before a bound cut still counts
+    stats: Optional[MapperStats] = None
     # per-einsum optimal mappings, rendered (evaluated points only)
     mappings: Dict[str, str] = field(default_factory=dict)
 
@@ -126,6 +132,8 @@ class DSEReport:
                     "objective": r.objective,
                     "on_frontier": r.on_frontier, "cached": r.cached,
                     "n_expanded": r.n_expanded, "t_search_s": r.t_search,
+                    "stats": (r.stats.to_dict()
+                              if r.stats is not None else None),
                     "mappings": r.mappings,
                 }
                 for r in self.rows

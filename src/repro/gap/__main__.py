@@ -25,6 +25,7 @@ import sys
 from repro.gap.runner import (ARCH_PRESETS, BASELINES, parse_budgets,
                               resolve_workloads, run_gap)
 from repro.gap import soundness as snd
+from repro.obs import Tracer
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -58,6 +59,12 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar="PATH",
                     help="write the machine-readable report (no PATH: "
                     "stdout)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="gap mode: record a search trace of the exact "
+                    "optima plus one span per baseline curve: *.jsonl for "
+                    "the raw event log, anything else for Chrome-trace "
+                    "JSON (Perfetto); inspect with python -m repro.obs "
+                    "report PATH")
     # soundness mode
     ap.add_argument("--cases", type=int, default=200,
                     help="soundness: number of fuzz cases (default: 200)")
@@ -143,11 +150,17 @@ def main() -> int:
                      if b.strip()]
     objectives = [o.strip() for o in args.objective.split(",") if o.strip()]
 
+    tracer = Tracer() if args.trace else None
     report = run_gap(workloads, arches, budgets, objectives=objectives,
-                     baselines=baselines, seed=args.seed, verbose=True)
+                     baselines=baselines, seed=args.seed, verbose=True,
+                     tracer=tracer)
     print(report.render())
     if args.json:
         _emit(report.to_dict(), args.json)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote trace {args.trace} ({len(tracer.events)} events)",
+              file=sys.stderr)
     return 0 if not report.violations else 1
 
 

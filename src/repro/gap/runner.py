@@ -23,6 +23,7 @@ from ..core.einsum import Einsum
 from ..core.mapper import tcm_map
 from ..core.presets import (gpt3_einsums, nvdla_like, small_matmul_suite,
                             tpu_v4i_like, tpu_v5e_like)
+from ..obs.tracer import active
 
 # a baseline objective this far (relatively) below the optimum is a real
 # violation, not compiled-kernel-vs-reference-model float noise (the same
@@ -184,14 +185,20 @@ def run_gap(workloads: Dict[str, Einsum],
             objectives: Sequence[str] = ("edp",),
             baselines: Optional[Sequence[str]] = None,
             seed: int = 0,
-            verbose: bool = False) -> GapReport:
+            verbose: bool = False,
+            tracer=None) -> GapReport:
     """The gap harness main loop.
 
     Baselines are re-run from scratch at every budget rung (rather than
     checkpointed) so each point is an independent, reproducible run — the
     curve answers "what does a *fresh* search with budget B achieve", the
     quantity the paper's comparison tables report.
+
+    ``tracer`` records the exact searches' full telemetry (via ``tcm_map``)
+    plus one span per baseline curve, so the harness's own wall-clock
+    budget splits between "computing optima" and "running baselines".
     """
+    tracer = active(tracer)
     names = list(baselines) if baselines is not None else list(BASELINES)
     for n in names:
         if n not in BASELINES:
@@ -205,7 +212,7 @@ def run_gap(workloads: Dict[str, Einsum],
         for aname, arch in arches.items():
             for kind in objectives:
                 t0 = time.perf_counter()
-                best, _ = tcm_map(ein, arch, objective=kind)
+                best, _ = tcm_map(ein, arch, objective=kind, tracer=tracer)
                 optima_wall[(wname, aname, kind)] = time.perf_counter() - t0
                 opt = best.objective(kind) if best is not None \
                     else float("inf")
@@ -216,6 +223,7 @@ def run_gap(workloads: Dict[str, Einsum],
                           flush=True)
                 for bname in names:
                     curve = GapCurve(wname, aname, kind, bname)
+                    t_curve = time.time() if tracer is not None else 0.0
                     for budget in budgets:
                         s = derive_seed(seed, wname, aname, bname, budget)
                         r = BASELINES[bname](ein, arch, budget, s, kind)
@@ -230,5 +238,12 @@ def run_gap(workloads: Dict[str, Einsum],
                             violations.append(Violation(
                                 wname, aname, kind, bname, budget, s,
                                 obj, opt))
+                    if tracer is not None:
+                        last = curve.points[-1] if curve.points else None
+                        tracer.complete(
+                            f"baseline:{bname}", t_curve, cat="phase",
+                            workload=wname, arch=aname, kind=kind,
+                            budgets=list(budgets),
+                            final_gap=last.gap if last else None)
                     curves.append(curve)
     return GapReport(curves, optima, optima_wall, violations)

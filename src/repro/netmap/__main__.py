@@ -21,6 +21,7 @@ from repro.configs import ARCHS, get_config
 from repro.core.presets import nvdla_like, tpu_v4i_like, tpu_v5e_like
 from repro.netmap.cache import MappingCache
 from repro.netmap.planner import map_network
+from repro.obs import Tracer
 
 ACCEL = {
     "tpu_v4i": lambda: tpu_v4i_like(),
@@ -65,6 +66,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="drop the cache before mapping")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the full report as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a search trace: *.jsonl for the raw event "
+                    "log, anything else for Chrome-trace JSON (Perfetto); "
+                    "inspect with python -m repro.obs report PATH")
     ap.add_argument("--verbose", action="store_true")
     return ap
 
@@ -83,13 +88,20 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"warning: skipped {cache.n_corrupt} corrupt cache line(s)",
               file=sys.stderr)
 
+    tracer = Tracer() if args.trace else None
     report = map_network(cfg, arch, objective=args.objective, mode=args.mode,
                          batch=args.batch, seq=args.seq, cache=cache,
                          workers=args.workers,
                          share_incumbents=not args.no_share_incumbents,
                          fuse=not args.no_fuse,
-                         verbose=args.verbose)
+                         verbose=args.verbose, tracer=tracer)
     print(report.render())
+    if cache is not None:
+        # the report line above shows this call's deltas; this one adds the
+        # cache object's lifetime accounting (reused caches span calls)
+        print(f"  cache lifetime: {cache.hits} hits / {cache.misses} misses "
+              f"(hit rate {100 * cache.hit_rate:.0f}%, "
+              f"{len(cache)} entries)")
     if report.cache_hits and not report.cache_misses:
         t_cold = (sum(u.t_search for u in report.unique)
                   + sum(f.t_search for f in report.fused))
@@ -99,6 +111,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         with open(args.json, "w") as f:
             json.dump(report.to_dict(), f, indent=2)
         print(f"  wrote {args.json}")
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"  wrote trace {args.trace} ({len(tracer.events)} events)")
     return 0
 
 

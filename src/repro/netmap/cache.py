@@ -27,7 +27,6 @@ Design points:
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os
@@ -39,7 +38,8 @@ from repro.core.arch import Arch, arch_key
 from repro.core.einsum import Einsum
 from repro.core.fusion import FusedMapping, FusedWorkload
 from repro.core.looptree import Loop, Mapping, Storage
-from repro.core.search import MapperStats, MappingResult, einsum_key
+from repro.core.search import (MapperStats, MappingResult, einsum_key,
+                               stats_from_dict)
 
 # v2: two-phase shared-incumbent search — optimum *values* are unchanged,
 # but a value-tied optimal mapping can be tie-broken differently than the
@@ -55,8 +55,6 @@ from repro.core.search import MapperStats, MappingResult, einsum_key
 # cross tool and naming boundaries; old name-keyed entries are invalidated.
 CACHE_VERSION = 4
 DEFAULT_ROOT = ".tcm_cache"
-
-_STATS_FIELDS = {f.name for f in dataclasses.fields(MapperStats)}
 
 
 # --------------------------------------------------------------------------
@@ -130,12 +128,15 @@ def result_from_wire(wire: dict) -> MappingResult:
     )
 
 
+# stats ride the canonical MapperStats serialization (to_dict /
+# stats_from_dict), shared with benchmark --json payloads and dse reports;
+# these aliases keep the wire-format vocabulary of this module uniform
 def stats_to_wire(stats: MapperStats) -> dict:
-    return dataclasses.asdict(stats)
+    return stats.to_dict()
 
 
 def stats_from_wire(wire: dict) -> MapperStats:
-    return MapperStats(**{k: v for k, v in wire.items() if k in _STATS_FIELDS})
+    return stats_from_dict(wire)
 
 
 # --------------------------------------------------------------------------

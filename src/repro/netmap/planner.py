@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.arch import Arch
+from repro.obs.tracer import active
 from repro.core.fusion import from_group, workload_key
 from repro.core.mapper import tcm_map, tcm_map_group
 from repro.core.search import (MapperStats, MappingResult, SearchEngine,
@@ -265,6 +266,7 @@ def map_network(
     fuse: bool = True,
     max_group: int = 3,
     verbose: bool = False,
+    tracer=None,
 ) -> NetworkReport:
     """Map every layer of ``cfg`` on ``arch`` and compose the network report.
 
@@ -285,8 +287,16 @@ def map_network(
     than the per-einsum baseline, and per-group fused-vs-unfused EDP deltas
     are reported either way.  ``fuse=False`` reproduces the independent
     per-layer planner bit-for-bit, stats included.
+
+    ``tracer`` records the planner's telemetry on top of the per-search
+    spans each ``tcm_map`` call emits: one ``hit``/``miss`` cache instant
+    per unique lookup (plus ``negative`` for fused groups cached as
+    unmappable) and one ``adopted``/``rejected`` instant per fusion-group
+    decision.  Observational only — reports are identical traced or not.
     """
+    tracer = active(tracer)
     t0 = time.perf_counter()
+    t_wall = time.time() if tracer is not None else 0.0
     if fuse:
         ng = extract_graph(cfg, mode=mode, batch=batch, seq=seq)
         entries = ng.entries
@@ -324,6 +334,10 @@ def map_network(
             exemplar = members[0]
             hit = (cache.get(exemplar.einsum, arch, objective, prune_partial)
                    if cache is not None else None)
+            if tracer is not None and cache is not None:
+                tracer.instant("hit" if hit is not None else "miss",
+                               cat="cache", op=exemplar.op,
+                               einsum=exemplar.einsum.name)
             if hit is not None:
                 result, stats, cached, t_search = (hit.result, hit.stats,
                                                    True, hit.t_search)
@@ -332,7 +346,7 @@ def map_network(
                 result, stats = tcm_map(exemplar.einsum, arch,
                                         objective=objective,
                                         prune_partial=prune_partial,
-                                        engine=engine)
+                                        engine=engine, tracer=tracer)
                 t_search = time.perf_counter() - t1
                 if result is None:
                     raise NoValidMappingError(
@@ -362,7 +376,7 @@ def map_network(
         if fuse:
             _map_fusion_groups(ng, arch, objective, prune_partial, cache,
                                engine, max_group, searched, report,
-                               adopted_member, verbose)
+                               adopted_member, verbose, tracer=tracer)
     finally:
         # engines we created are torn down even when a search raises;
         # caller-provided engines stay open for reuse
@@ -401,12 +415,20 @@ def map_network(
     else:
         report.cache_misses = len(report.unique) + len(report.fused)
     report.t_total = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete(
+            f"map_network:{cfg.name}", t_wall, cat="driver",
+            backend=engine.backend, arch=arch.name, mode=mode,
+            n_layer_ops=len(report.rows), n_unique=len(report.unique),
+            n_fused=len(report.fused), edp=report.total_edp,
+            cache_hits=report.cache_hits,
+            cache_misses=report.cache_misses)
     return report
 
 
 def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                        max_group, searched, report, adopted_member,
-                       verbose) -> None:
+                       verbose, tracer=None) -> None:
     """Joint-search the workload graph's fusion groups.
 
     Each structurally distinct group is searched once (dedup by member
@@ -437,6 +459,12 @@ def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                      "latency": ind_l}[objective]
             hit = (cache.get_group(w, arch, objective, prune_partial)
                    if cache is not None else None)
+            if tracer is not None and cache is not None:
+                # a hit whose result is None is a *negative* entry: the
+                # group was searched before and admits no fused mapping
+                name = ("miss" if hit is None
+                        else "negative" if hit.result is None else "hit")
+                tracer.instant(name, cat="cache", group=w.name)
             if hit is not None:
                 result, stats, cached, t_search = (hit.result, hit.stats,
                                                    True, hit.t_search)
@@ -445,7 +473,7 @@ def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                 result, stats = tcm_map_group(
                     w, arch, objective=objective,
                     prune_partial=prune_partial, engine=engine,
-                    inc_obj=bound)
+                    inc_obj=bound, tracer=tracer)
                 t_search = time.perf_counter() - t1
                 report.t_search += t_search
                 cached = False
@@ -467,6 +495,12 @@ def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                            if result is not None else None))
             rows_by_key[gkey] = row
             report.fused.append(row)
+            if tracer is not None:
+                tracer.instant(
+                    "adopted" if adopted else "rejected", cat="fusion",
+                    ops=w.name, adopted=adopted, fused_edp=row.fused_edp,
+                    unfused_edp=row.unfused_edp, pin_level=row.pin_level,
+                    cached=cached)
             if stats is not None:
                 report.n_evaluated += stats.n_expanded
             if verbose:

@@ -1,0 +1,350 @@
+"""Observability subsystem: zero-overhead contract, event merging, exports.
+
+The load-bearing contract is that tracing is *observational*: with
+``tracer=None`` (the default) every hot path executes the exact pre-tracing
+instruction stream, and with a live tracer the search returns bit-identical
+optima and counter stats while additionally emitting a coherent event
+stream whose per-criterion prune attribution sums to the ``n_pruned_*``
+fields of ``MapperStats`` (the ISSUE-7 acceptance criterion).
+"""
+import json
+
+import pytest
+
+from repro.core.arch import Arch, MemLevel
+from repro.core.einsum import matmul
+from repro.core.mapper import tcm_map
+from repro.core.presets import small_matmul_suite, tpu_v4i_like
+from repro.core.search import MapperStats, stats_from_dict
+from repro.obs import (NULL_TRACER, NullTracer, Tracer, active, from_chrome,
+                       profile, read_jsonl, read_trace, to_chrome,
+                       write_chrome, write_jsonl)
+from repro.obs.__main__ import main as obs_main
+
+EIN = matmul("mm", 4, 4, 4)
+ARCH = Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                  MemLevel("GLB", 12, 1, 1, 1e9)), mac_energy=0.5)
+
+NON_TIMING = lambda st: {k: v for k, v in st.to_dict().items()  # noqa: E731
+                         if not k.startswith("t_")}
+
+
+def prune_sums(events):
+    """Sum the per-criterion attribution over all step counter events."""
+    out = {"expanded": 0, "pruned_dominated": 0, "pruned_bound": 0,
+           "pruned_invalid": 0}
+    for ev in events:
+        if ev.get("cat") == "step":
+            for k in out:
+                out[k] += ev.get("args", {}).get(k, 0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# tracer primitives
+# --------------------------------------------------------------------------
+
+
+def test_null_tracer_is_inert():
+    nt = NullTracer()
+    with nt.span("x", cat="driver", a=1):
+        nt.instant("i")
+        nt.counter("c", v=2)
+        nt.complete("done", 0.0)
+        nt.extend([{"ph": "i"}])
+    assert nt.events == [] and NULL_TRACER.events == []
+    assert not nt.enabled
+
+
+def test_active_normalizes():
+    tr = Tracer()
+    assert active(None) is None
+    assert active(NullTracer()) is None
+    assert active(NULL_TRACER) is None
+    assert active(tr) is tr
+
+
+def test_tracer_event_shapes():
+    tr = Tracer()
+    with tr.span("outer", cat="phase", k=1):
+        tr.instant("tick", cat="incumbent", objective=2.0)
+        tr.counter("expand", cat="step", expanded=3)
+    kinds = {ev["ph"] for ev in tr.events}
+    assert kinds == {"X", "i", "C"}
+    for ev in tr.events:
+        assert set(ev) >= {"ph", "name", "cat", "ts", "pid", "tid", "args"}
+        json.dumps(ev)  # JSON-safe (crosses process + file boundaries)
+    span = [e for e in tr.events if e["ph"] == "X"][0]
+    assert span["dur"] >= 0 and span["args"] == {"k": 1}
+
+
+# --------------------------------------------------------------------------
+# zero-overhead / bit-identical contract (the tentpole invariant)
+# --------------------------------------------------------------------------
+
+
+def test_serial_traced_bit_identical_and_attributed():
+    best_u, st_u = tcm_map(EIN, ARCH)
+    tr = Tracer()
+    best_t, st_t = tcm_map(EIN, ARCH, tracer=tr)
+    assert (best_t.energy, best_t.latency, best_t.edp) == \
+        (best_u.energy, best_u.latency, best_u.edp)
+    assert best_t.mapping == best_u.mapping
+    assert NON_TIMING(st_t) == NON_TIMING(st_u)
+    # acceptance criterion: per-criterion prune counts sum to MapperStats
+    sums = prune_sums(tr.events)
+    assert sums["expanded"] == st_t.n_expanded
+    assert sums["pruned_dominated"] == st_t.n_pruned_dominated
+    assert sums["pruned_bound"] == st_t.n_pruned_bound
+    assert sums["pruned_invalid"] == st_t.n_pruned_invalid
+    # one driver span closes the trace; phase spans nest under it
+    drivers = [e for e in tr.events if e.get("cat") == "driver"]
+    assert [d["name"] for d in drivers] == ["tcm_map:mm"]
+    assert {e["name"] for e in tr.events if e.get("cat") == "phase"} >= \
+        {"enumerate", "search"}
+
+
+def test_null_tracer_matches_none():
+    best_n, st_n = tcm_map(EIN, ARCH, tracer=NullTracer())
+    best_u, st_u = tcm_map(EIN, ARCH)
+    assert best_n.edp == best_u.edp and best_n.mapping == best_u.mapping
+    assert NON_TIMING(st_n) == NON_TIMING(st_u)
+
+
+def test_pool_unshared_traced_bit_identical():
+    best_u, st_u = tcm_map(EIN, ARCH, share_incumbents=False)
+    tr = Tracer()
+    best_t, st_t = tcm_map(EIN, ARCH, workers=2, share_incumbents=False,
+                           tracer=tr)
+    assert (best_t.energy, best_t.latency, best_t.edp) == \
+        (best_u.energy, best_u.latency, best_u.edp)
+    assert best_t.mapping == best_u.mapping
+    assert NON_TIMING(st_t) == NON_TIMING(st_u)
+    # worker buffers merged: prune attribution still sums exactly
+    sums = prune_sums(tr.events)
+    assert sums["expanded"] == st_t.n_expanded
+    assert sums["pruned_bound"] == st_t.n_pruned_bound
+
+
+def test_pool_shared_traced_value_parity_and_self_consistent():
+    best_u, _ = tcm_map(EIN, ARCH)
+    tr = Tracer()
+    best_t, st_t = tcm_map(EIN, ARCH, workers=2, tracer=tr)
+    assert (best_t.energy, best_t.latency, best_t.edp) == \
+        (best_u.energy, best_u.latency, best_u.edp)
+    # shared-pool prune counters are scheduling-dependent, but the trace
+    # must stay self-consistent with the stats of ITS OWN run
+    sums = prune_sums(tr.events)
+    assert sums["expanded"] == st_t.n_expanded
+    assert sums["pruned_bound"] == st_t.n_pruned_bound
+    assert sums["pruned_dominated"] == st_t.n_pruned_dominated
+    assert sums["pruned_invalid"] == st_t.n_pruned_invalid
+
+
+def test_pool_events_merge_in_unit_order():
+    tr = Tracer()
+    tcm_map(EIN, ARCH, workers=2, share_incumbents=False, tracer=tr)
+    units = [e for e in tr.events if e.get("cat") == "unit"]
+    assert units, "no unit spans in pool trace"
+    indices = [u["args"]["index"] for u in units]
+    assert indices == sorted(indices), \
+        "worker event buffers must merge in deterministic unit order"
+
+
+def test_incumbent_timeline_present():
+    suite = small_matmul_suite()
+    tr = Tracer()
+    best, _ = tcm_map(suite["P0"], tpu_v4i_like(), tracer=tr)
+    incs = [e for e in tr.events if e.get("cat") == "incumbent"]
+    assert incs, "shared-incumbent search must record tightenings"
+    assert incs[0]["name"] == "seeded"  # beam-dive seeds the global bound
+    objs = [e["args"]["objective"] for e in incs]
+    assert objs == sorted(objs, reverse=True)  # monotone tightening
+    assert objs[-1] == pytest.approx(best.edp)
+
+
+# --------------------------------------------------------------------------
+# MapperStats wire format (satellite: canonical to_dict / from_dict)
+# --------------------------------------------------------------------------
+
+
+def test_stats_dict_roundtrip():
+    _, st = tcm_map(EIN, ARCH)
+    wire = st.to_dict()
+    json.dumps(wire)  # JSON-safe
+    back = stats_from_dict(wire)
+    assert isinstance(back, MapperStats)
+    assert back.to_dict() == wire
+    # forward compatible: unknown keys are dropped, missing keys default
+    wire2 = dict(wire, someday_a_new_field=7)
+    assert stats_from_dict(wire2).to_dict() == wire
+    assert stats_from_dict({"n_expanded": 3}).n_expanded == 3
+
+
+# --------------------------------------------------------------------------
+# exports
+# --------------------------------------------------------------------------
+
+
+def _traced_events():
+    tr = Tracer()
+    tcm_map(EIN, ARCH, tracer=tr)
+    return tr.events
+
+
+def test_jsonl_roundtrip(tmp_path):
+    events = _traced_events()
+    p = tmp_path / "t.jsonl"
+    write_jsonl(events, p)
+    back = read_jsonl(p)
+    assert len(back) == len(events)
+    assert sorted(map(json.dumps, back)) == sorted(map(json.dumps, events))
+    assert read_trace(p) == back  # auto-detect: JSONL
+
+
+def test_chrome_roundtrip(tmp_path):
+    events = _traced_events()
+    doc = to_chrome(events)
+    assert doc["otherData"]["producer"] == "repro.obs"
+    body = [r for r in doc["traceEvents"] if r["ph"] != "M"]
+    meta = [r for r in doc["traceEvents"] if r["ph"] == "M"]
+    assert len(body) == len(events)
+    assert meta and meta[0]["args"]["name"] == "mapper driver"
+    assert min(r["ts"] for r in body) == 0.0  # rebased, microseconds
+    for r in body:  # Perfetto-loadable: every record fully keyed
+        assert set(r) >= {"ph", "name", "cat", "ts", "pid", "tid"}
+    back = from_chrome(doc)
+    assert len(back) == len(events)
+    for a, b in zip(back, sorted(events, key=lambda e: e["ts"])):
+        assert a["name"] == b["name"] and a["cat"] == b["cat"]
+        assert a["ts"] == pytest.approx(b["ts"], abs=1e-5)
+    p = tmp_path / "t.json"
+    write_chrome(events, p)
+    assert len(read_trace(p)) == len(events)  # auto-detect: Chrome
+
+
+def test_tracer_save_picks_format(tmp_path):
+    tr = Tracer()
+    tr.instant("x")
+    tr.save(tmp_path / "a.jsonl")
+    tr.save(tmp_path / "a.json")
+    assert (tmp_path / "a.jsonl").read_text().startswith('{"ph":"i"')
+    assert json.loads((tmp_path / "a.json").read_text())["traceEvents"]
+
+
+# --------------------------------------------------------------------------
+# profile report + CLI
+# --------------------------------------------------------------------------
+
+
+def test_profile_report_contents():
+    suite = small_matmul_suite()
+    tr = Tracer()
+    _, st = tcm_map(suite["P0"], tpu_v4i_like(), tracer=tr)
+    rep = profile(tr.events)
+    assert rep.n_events == len(tr.events)
+    assert rep.prune.expanded == st.n_expanded
+    assert rep.prune.pruned_total == (st.n_pruned_dominated
+                                      + st.n_pruned_bound
+                                      + st.n_pruned_invalid)
+    assert rep.units and rep.incumbents
+    assert rep.units == sorted(rep.units, key=lambda u: -u["dur"])
+    text = rep.render(top_k=3)
+    assert "phase breakdown" in text
+    assert "prune attribution" in text
+    assert "incumbent timeline" in text
+    assert "most expensive work units" in text
+
+
+def test_profile_empty():
+    rep = profile([])
+    assert rep.n_events == 0 and "0 events" in rep.render()
+
+
+def test_obs_cli(tmp_path, capsys):
+    events = _traced_events()
+    src = tmp_path / "t.jsonl"
+    write_jsonl(events, src)
+    assert obs_main(["report", str(src), "--top", "2"]) == 0
+    assert "phase breakdown" in capsys.readouterr().out
+    assert obs_main([str(src)]) == 0  # bare path implies report
+    assert "phase breakdown" in capsys.readouterr().out
+    chrome = tmp_path / "t.json"
+    assert obs_main(["chrome", str(src), "-o", str(chrome)]) == 0
+    assert len(from_chrome(json.loads(chrome.read_text()))) == len(events)
+    jl = tmp_path / "back.jsonl"
+    assert obs_main(["jsonl", str(chrome), "-o", str(jl)]) == 0
+    assert len(read_jsonl(jl)) == len(events)
+
+
+# --------------------------------------------------------------------------
+# consumers: netmap cache/fusion, dse, gap
+# --------------------------------------------------------------------------
+
+
+def test_netmap_trace_cache_and_fusion_events(tmp_path):
+    from repro.configs import get_config
+    from repro.netmap import MappingCache, map_network
+
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    arch = tpu_v4i_like()
+    cache = MappingCache(root=tmp_path)
+    tr_cold = Tracer()
+    rep_cold = map_network(cfg, arch, mode="decode", batch=1, seq=16,
+                           cache=cache, tracer=tr_cold)
+    cold = [e for e in tr_cold.events if e.get("cat") == "cache"]
+    assert cold and all(e["name"] in ("miss", "negative") for e in cold)
+    fusion = [e for e in tr_cold.events if e.get("cat") == "fusion"]
+    assert fusion and all(e["name"] in ("adopted", "rejected")
+                          for e in fusion)
+    drivers = [e for e in tr_cold.events if e.get("cat") == "driver"
+               and e["name"].startswith("map_network:")]
+    assert len(drivers) == 1
+    assert drivers[0]["args"]["edp"] == pytest.approx(rep_cold.total_edp)
+
+    tr_warm = Tracer()
+    rep_warm = map_network(cfg, arch, mode="decode", batch=1, seq=16,
+                           cache=cache, tracer=tr_warm)
+    warm = [e for e in tr_warm.events if e.get("cat") == "cache"]
+    assert warm and all(e["name"] in ("hit", "negative") for e in warm)
+    assert rep_warm.total_edp == rep_cold.total_edp
+    assert cache.hits > 0 and 0 < cache.hit_rate <= 1.0
+
+
+def test_dse_trace_events():
+    from repro.core.einsum import batched_matmul
+    from repro.dse import explore_space, get_space
+
+    tr = Tracer()
+    rep = explore_space(get_space("edge-small"),
+                        [batched_matmul("fqk", 8, 4, 32, 64),
+                         batched_matmul("fav", 8, 4, 64, 32)],
+                        collect_mappings=False, tracer=tr)
+    dse = [e for e in tr.events if e.get("cat") == "dse"]
+    points = [e for e in dse if e["ph"] == "X"]
+    instants = [e for e in dse if e["ph"] == "i"]
+    assert len(instants) == rep.n_points  # one outcome instant per point
+    assert sum(1 for e in instants if e["name"] == "pruned_roofline") == \
+        rep.n_pruned_roofline
+    assert sum(1 for e in instants if e["name"] == "evaluated") == \
+        rep.n_evaluated
+    # evaluated + bound-cut + infeasible points get an evaluation span
+    assert len(points) == rep.n_points - rep.n_pruned_roofline
+    drv = [e for e in tr.events if e.get("cat") == "driver"
+           and e["name"].startswith("explore_space:")]
+    assert drv and drv[0]["args"]["n_evaluated"] == rep.n_evaluated
+
+
+def test_gap_trace_baseline_spans():
+    from repro.gap.runner import run_gap
+
+    tr = Tracer()
+    rep = run_gap({"mm": EIN}, {"a": ARCH}, budgets=[40],
+                  baselines=["random"], tracer=tr)
+    assert not rep.violations
+    spans = [e for e in tr.events if e["name"] == "baseline:random"]
+    assert len(spans) == 1
+    assert spans[0]["args"]["budgets"] == [40]
+    assert spans[0]["args"]["final_gap"] >= 1.0
+    # the exact optimum's search telemetry rides along
+    assert any(e["name"] == "tcm_map:mm" for e in tr.events)
