@@ -71,6 +71,19 @@ def main(argv) -> int:
                 f"deterministic; update perf_reference.json if the "
                 f"instrumentation changed intentionally)")
 
+    # budgeted QK run: the anytime-search meter must stay off-path (the
+    # interleaved min-of-3 ratio again insulates from runner speed; the
+    # bit-identity of optimum and stats is asserted inside perf_smoke)
+    blimit = None
+    if "max_budget_overhead_ratio" in ref and "qk_budget_overhead" in perf:
+        blimit = ref["max_budget_overhead_ratio"]
+        if perf["qk_budget_overhead"] > blimit:
+            failures.append(
+                f"budgeted QK overhead {perf['qk_budget_overhead']}x > "
+                f"{blimit}x ({perf['qk_budget_s']}s budgeted vs "
+                f"{perf['qk_search_s']}s unbudgeted) — the anytime-search "
+                f"machinery is no longer off-path")
+
     # fused QK->AV joint search (same two gates, when the record has it)
     flimit_s = flimit_n = None
     if "fused_qkav_s" in ref and "fused_qkav_s" in perf:
@@ -122,6 +135,9 @@ def main(argv) -> int:
             msg += (f"; traced {perf['qk_traced_s']}s = "
                     f"{perf['qk_trace_overhead']}x (limit {tlimit}x), "
                     f"{perf['qk_trace_events']} events")
+        if blimit is not None:
+            msg += (f"; budgeted {perf['qk_budget_s']}s = "
+                    f"{perf['qk_budget_overhead']}x (limit {blimit}x)")
         if flimit_s is not None:
             msg += (f"; fused QK+AV {perf['fused_qkav_s']}s "
                     f"(limit {flimit_s}s), n_expanded "

@@ -44,7 +44,13 @@ def perf_smoke(trace_path=None) -> dict:
     ``max_trace_overhead_ratio``, and its serial event count is
     deterministic (``qk_trace_events``).  ``trace_path`` saves the last
     traced run's event stream (the CI trace artifact).
+
+    A third interleaved QK run carries a live-but-never-expiring
+    ``SearchBudget`` meter: the anytime-search machinery must be off-path
+    — bit-identical optimum and stats, wall time within
+    ``max_budget_overhead_ratio`` of the unbudgeted run.
     """
+    from repro.core.budget import SearchBudget
     from repro.core.einsum import batched_matmul
     from repro.core.fusion import FusedWorkload, GroupEdge
     from repro.core.mapper import tcm_map, tcm_map_group
@@ -54,7 +60,7 @@ def perf_smoke(trace_path=None) -> dict:
     from repro.obs import Tracer
 
     suite = small_matmul_suite()
-    qk_walls, qk_traced_walls = [], []
+    qk_walls, qk_traced_walls, qk_budget_walls = [], [], []
     best = stats = tracer = None
     for _ in range(3):
         clear_caches()
@@ -75,8 +81,25 @@ def perf_smoke(trace_path=None) -> dict:
         d_t = {k: v for k, v in stats_t.to_dict().items()
                if not k.startswith("t_")}
         assert d_t == d_u, f"tracing changed MapperStats: {d_t} != {d_u}"
+
+        clear_caches()
+        t0 = time.perf_counter()
+        best_b, stats_b = tcm_map(
+            suite["QK"], tpu_v4i_like(),
+            budget=SearchBudget(deadline_s=3600.0, max_expanded=10 ** 12))
+        qk_budget_walls.append(time.perf_counter() - t0)
+        assert not stats_b.truncated and stats_b.gap_bound == 1.0, \
+            "a never-expiring budget reported truncation"
+        assert (best_b.energy, best_b.latency, best_b.edp) == \
+            (best.energy, best.latency, best.edp), \
+            "budget metering changed the QK optimum"
+        d_b = {k: v for k, v in stats_b.to_dict().items()
+               if not k.startswith("t_")}
+        assert d_b == d_u, f"budget metering changed MapperStats: " \
+            f"{d_b} != {d_u}"
     qk_s = min(qk_walls)
     qk_traced_s = min(qk_traced_walls)
+    qk_budget_s = min(qk_budget_walls)
     if trace_path:
         tracer.save(trace_path)
         print(f"# wrote trace {trace_path} ({len(tracer.events)} events)",
@@ -135,6 +158,8 @@ def perf_smoke(trace_path=None) -> dict:
         "qk_traced_s": round(qk_traced_s, 3),
         "qk_trace_overhead": round(qk_traced_s / max(qk_s, 1e-9), 3),
         "qk_trace_events": len(tracer.events),
+        "qk_budget_s": round(qk_budget_s, 3),
+        "qk_budget_overhead": round(qk_budget_s / max(qk_s, 1e-9), 3),
         "qk_stats": stats.to_dict(),
         "p0_unshared_s": round(p0_unshared_s, 3),
         "p0_shared_s": round(p0_shared_s, 3),
@@ -155,7 +180,9 @@ def perf_smoke(trace_path=None) -> dict:
           f"(n_expanded={stats.n_expanded}, "
           f"traced {qk_traced_s:.2f}s = "
           f"{perf['qk_trace_overhead']}x, "
-          f"{perf['qk_trace_events']} events), "
+          f"{perf['qk_trace_events']} events, "
+          f"budgeted {qk_budget_s:.2f}s = "
+          f"{perf['qk_budget_overhead']}x), "
           f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x, "
           f"fused QK+AV {fused_s:.2f}s "
           f"(n_expanded={f_stats.n_expanded}), "

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..obs.tracer import active
 from .arch import Arch
+from .budget import ensure_meter
 from .dataflow import count_unpruned_dataflows, make_slots
 from .einsum import Einsum
 from .factor import prime_factorization as _prime_factorization
@@ -134,6 +135,8 @@ def tcm_map(
     share_incumbents: bool = True,
     inc_obj: float = float("inf"),
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Find the optimal mapping of ``einsum`` on ``arch``.
 
@@ -167,6 +170,20 @@ def tcm_map(
     explorations with prune attribution, incumbent tightenings — without
     changing any result: with tracing off (the default) optima and stats
     are bit-identical to the untraced search.
+
+    ``budget`` (a :class:`~repro.core.budget.SearchBudget`, a live meter, or
+    ``None``) makes the search *anytime*: on deadline/node-cap expiry the
+    best incumbent found so far is returned with ``stats.truncated=True``
+    and a certified optimality bound in ``stats.gap_bound`` (the true
+    optimum is provably within that factor; ``inf`` when nothing sound is
+    known).  ``budget=None`` (the default) is bit-identical to the
+    unbudgeted search, stats included.
+
+    ``checkpoint`` (a :class:`~repro.core.journal.SearchCheckpoint`, or
+    ``None``) journals every finished work unit and serves journaled units
+    on a later identical call without re-searching — the resume path for
+    interrupted runs.  Only honored when this call creates its own engine;
+    a caller-provided ``engine`` keeps its own checkpoint setting.
     """
     tracer = active(tracer)
     stats = MapperStats()
@@ -177,10 +194,12 @@ def tcm_map(
           if tracer is not None else nullcontext()):
         units = build_work_units(einsum, arch, objective, prune_partial,
                                  collect_sizes, stats)
+    meter = ensure_meter(budget)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
-                             share_incumbents=share_incumbents)
+                             share_incumbents=share_incumbents,
+                             checkpoint=checkpoint)
     if verbose:
         print(f"dispatching {len(units)} work units "
               f"({stats.n_dataplacements} dataplacements) "
@@ -189,7 +208,7 @@ def tcm_map(
     best: Optional[MappingResult] = None
     try:
         best = _run_and_merge(units, objective, engine, stats,
-                              inc_obj=inc_obj, tracer=tracer)
+                              inc_obj=inc_obj, tracer=tracer, budget=meter)
     finally:
         # engines passed in by the caller stay open (netmap reuses one pool
         # across a whole model's searches); self-made ones are torn down
@@ -204,33 +223,65 @@ def tcm_map(
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
     if tracer is not None:
+        extra = ({"truncated": True, "gap_bound": stats.gap_bound}
+                 if stats.truncated else {})
         tracer.complete(
             f"tcm_map:{einsum.name}", t_wall, cat="driver",
             backend=engine.backend, n_units=len(units),
             objective_kind=objective,
             objective=best.objective(objective) if best else None,
-            n_expanded=stats.n_expanded)
+            n_expanded=stats.n_expanded, **extra)
     return best, stats
+
+
+def _certify_gap(stats: MapperStats, best: Optional[MappingResult],
+                 objective: str, inc_obj: float, frontier_lb: float) -> None:
+    """Turn the surviving lower bounds of a truncated run into a certified
+    optimality gap (``stats.gap_bound``).
+
+    Soundness: every mapping the search did not fully evaluate was either
+    (a) in a truncated unit's surviving frontier — objective >= that unit's
+    relaxed ``lower_bound``; (b) bound-pruned — objective >= the bound at
+    prune time >= the final bound ``min(best, inc_obj)`` (the bound only
+    tightens); or (c) dominance/invalid-pruned, whose completions are
+    covered by a surviving or bound-pruned candidate.  So the true optimum
+    >= ``min(best, inc_obj, frontier_lb)`` and the returned incumbent is
+    within ``best / that`` of it.  A non-positive or non-finite lower bound
+    certifies nothing: the gap is ``inf`` (honest, not a failure).
+    """
+    if not stats.truncated:
+        return
+    best_obj = best.objective(objective) if best is not None else float("inf")
+    lb = min(best_obj, inc_obj, frontier_lb)
+    if best is None or lb <= 0.0 or not math.isfinite(lb):
+        stats.gap_bound = float("inf")
+    else:
+        stats.gap_bound = max(stats.gap_bound, best_obj / lb)
 
 
 def _run_and_merge(units, objective: str, engine: SearchEngine,
                    stats: MapperStats,
                    inc_obj: float = float("inf"),
-                   tracer=None) -> Optional[MappingResult]:
+                   tracer=None, budget=None) -> Optional[MappingResult]:
     """Dispatch units through ``engine`` and reduce in enumeration order.
 
     The strict ``<`` comparison in unit order is the bit-parity contract:
     both backends return results in unit order, so the selected optimum is
-    identical serial or parallel.
+    identical serial or parallel.  Truncated units contribute their
+    surviving-frontier lower bounds to the driver-level gap certificate.
     """
     best: Optional[MappingResult] = None
-    for r in engine.run(units, inc_obj, tracer=tracer):
+    frontier_lb = float("inf")
+    for r in engine.run(units, inc_obj, tracer=tracer, budget=budget):
         stats.merge(r.stats)
+        if r.truncated:
+            frontier_lb = min(frontier_lb, r.lower_bound)
         c = r.candidate
         if c is not None and (
                 best is None
                 or c.objective(objective) < best.objective(objective)):
             best = c
+    _certify_gap(stats, best, objective, inc_obj, frontier_lb)
     return best
 
 
@@ -245,6 +296,8 @@ def tcm_map_best_arch(
     share_incumbents: bool = True,
     inc_obj: float = float("inf"),
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> Tuple[int, Optional[MappingResult], MapperStats]:
     """Find the best (architecture, mapping) pair for ``einsum`` over a
     batch of candidate architectures in ONE engine dispatch.
@@ -278,16 +331,21 @@ def tcm_map_best_arch(
             units += build_work_units(einsum, arch, objective, prune_partial,
                                       False, per, index_base=len(units))
             stats.merge(per)
+    meter = ensure_meter(budget)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
-                             share_incumbents=share_incumbents)
+                             share_incumbents=share_incumbents,
+                             checkpoint=checkpoint)
 
     best: Optional[MappingResult] = None
     best_arch = -1
+    frontier_lb = float("inf")
     try:
-        for r in engine.run(units, inc_obj, tracer=tracer):
+        for r in engine.run(units, inc_obj, tracer=tracer, budget=meter):
             stats.merge(r.stats)
+            if r.truncated:
+                frontier_lb = min(frontier_lb, r.lower_bound)
             c = r.candidate
             if c is not None and (
                     best is None
@@ -298,18 +356,21 @@ def tcm_map_best_arch(
     finally:
         if owns_engine:
             engine.close()
+    _certify_gap(stats, best, objective, inc_obj, frontier_lb)
     if best is not None:
         validate_structure(einsum, arches[best_arch], best.mapping)
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
     if tracer is not None:
+        extra = ({"truncated": True, "gap_bound": stats.gap_bound}
+                 if stats.truncated else {})
         tracer.complete(
             f"tcm_map_best_arch:{einsum.name}", t_wall, cat="driver",
             backend=engine.backend, n_units=len(units),
             n_arches=len(arches), best_arch=best_arch,
             objective_kind=objective,
             objective=best.objective(objective) if best else None,
-            n_expanded=stats.n_expanded)
+            n_expanded=stats.n_expanded, **extra)
     return best_arch, best, stats
 
 
@@ -326,6 +387,8 @@ def tcm_map_group(
     max_units: Optional[int] = 4096,
     inc_obj: float = float("inf"),
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> Tuple[Optional[MappingResult], MapperStats]:
     """Jointly map a fusion group: intermediates pinned on-chip, shared
     rank classes co-tiled, every (pin level, member dataplacement, member
@@ -369,10 +432,12 @@ def tcm_map_group(
 
     units = [WorkUnit(i, workload, arch, sk, objective, prune_partial)
              for i, sk in enumerate(skeletons)]
+    meter = ensure_meter(budget)
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
-                             share_incumbents=share_incumbents)
+                             share_incumbents=share_incumbents,
+                             checkpoint=checkpoint)
     if verbose:
         print(f"dispatching {len(units)} fused work units for "
               f"{workload.name} via {engine.backend}")
@@ -380,7 +445,7 @@ def tcm_map_group(
     best: Optional[MappingResult] = None
     try:
         best = _run_and_merge(units, objective, engine, stats,
-                              inc_obj=inc_obj, tracer=tracer)
+                              inc_obj=inc_obj, tracer=tracer, budget=meter)
     finally:
         if owns_engine:
             engine.close()
@@ -393,10 +458,12 @@ def tcm_map_group(
     stats.finalize()
     stats.t_total = time.perf_counter() - t0
     if tracer is not None:
+        extra = ({"truncated": True, "gap_bound": stats.gap_bound}
+                 if stats.truncated else {})
         tracer.complete(
             f"tcm_map_group:{workload.name}", t_wall, cat="driver",
             backend=engine.backend, n_units=len(units),
             objective_kind=objective,
             objective=best.objective(objective) if best else None,
-            n_expanded=stats.n_expanded)
+            n_expanded=stats.n_expanded, **extra)
     return best, stats

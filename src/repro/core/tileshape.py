@@ -40,15 +40,22 @@ class ExploreStats:
     n_pruned_invalid: int = 0
     n_pruned_bound: int = 0
     max_frontier: int = 0
+    truncated: bool = False  # stopped by an expired SearchBudget
 
 
 @dataclass
 class ExploreResult:
-    bounds: np.ndarray  # best full assignment, site order
+    # best full assignment, site order; None only on a truncated search
+    # whose beam dive found no complete mapping (anytime best-so-far absent)
+    bounds: Optional[np.ndarray]
     energy: float
     latency: float
     edp: float
     stats: ExploreStats
+    truncated: bool = False
+    # sound objective lower bound over every valid completion of this unit,
+    # inf when the search ran to completion (exact — no gap to certify)
+    lower_bound: float = float("inf")
 
 
 PARETO_EXACT_N = 2048
@@ -806,6 +813,7 @@ def explore(cm: CurriedModel, objective: str = "edp",
             inc_obj: float = float("inf"),
             inc_reader: Optional[Callable[[], float]] = None,
             tracer=None,
+            budget=None,
             ) -> Optional[ExploreResult]:
     """Full exploration of one curried model's tile shapes.
 
@@ -827,6 +835,14 @@ def explore(cm: CurriedModel, objective: str = "edp",
     only — tracing never changes which candidates survive, so results are
     bit-identical with tracing on or off; with ``tracer=None`` (the default)
     the only cost is one identity check per emission site.
+
+    ``budget`` (a live meter from ``repro.core.budget``, or None) makes the
+    search *anytime*: expansions are charged to the meter and expiry is
+    checked once per branch-and-bound step; an expired search stops where
+    it is and returns a truncated result — the beam-dive incumbent as the
+    best-so-far mapping plus a sound ``lower_bound`` on every valid
+    completion of this unit (see :func:`_truncate`).  ``budget=None`` (the
+    default) executes the historical instruction stream.
     """
     stats = ExploreStats()
     if not cm.sites:
@@ -854,6 +870,9 @@ def explore(cm: CurriedModel, objective: str = "edp",
             pruned_dominated=stats.n_pruned_dominated - p0[2])
 
     for step, k in enumerate(st.explore_order):
+        if budget is not None and budget.expired():
+            return _truncate(st, cols, rem, assigned, incumbent, bound,
+                             stats)
         p0 = (stats.n_pruned_invalid, stats.n_pruned_bound,
               stats.n_pruned_dominated)
         out = st.expand(k, cols, rem, fan_rem)
@@ -865,6 +884,8 @@ def explore(cm: CurriedModel, objective: str = "edp",
         assigned.append(k)
         expanded_here = cols.shape[0]
         stats.n_expanded += expanded_here
+        if budget is not None:
+            budget.charge(expanded_here)
         last_step = step == len(st.explore_order) - 1
         assigned_set = set(assigned)
         known = frozenset(st.sites[i].sym for i in assigned)
@@ -939,3 +960,41 @@ def _finish(none, incumbent, stats) -> Optional[ExploreResult]:
     bounds, energy, latency, _ = incumbent
     return ExploreResult(bounds=bounds, energy=energy, latency=latency,
                          edp=energy * latency, stats=stats)
+
+
+def _truncate(st, cols, rem, assigned, incumbent, bound,
+              stats) -> ExploreResult:
+    """Budget-expired exit: best-so-far result plus a sound lower bound.
+
+    Soundness of ``lower_bound = min(frontier relaxed LB, bound)`` over
+    every valid completion of this unit:
+
+      * Surviving frontier rows complete to at least their relaxed-term
+        objective lower bound (``objective_lower_bound``, the same bound
+        branch-and-bound pruning trusts).
+      * Bound-pruned rows completed to at least the bound *at prune time*;
+        the running ``bound`` only ever tightens (min of beam incumbent,
+        external ``inc_obj`` and ``inc_reader`` re-reads), so they are also
+        >= the final ``bound``.
+      * Dominance-prune chains terminate at a surviving or bound-pruned
+        row whose completions are no worse; invalid-pruned rows admit no
+        valid completion at all.
+
+    The returned mapping (the unit's beam-dive incumbent, when one exists)
+    is a real, validity-checked mapping, so its objective is itself >= the
+    reported lower bound — the certified gap is always >= 1.
+    """
+    stats.truncated = True
+    lb = float(bound) if np.isfinite(bound) else float("inf")
+    if cols.shape[0]:
+        known = frozenset(st.sites[i].sym for i in assigned)
+        frontier_lb = st.objective_lower_bound(cols, rem, known)
+        lb = min(lb, float(frontier_lb.min()))
+    res = _finish(None, incumbent, stats)
+    if res is None:
+        res = ExploreResult(bounds=None, energy=float("inf"),
+                            latency=float("inf"), edp=float("inf"),
+                            stats=stats)
+    res.truncated = True
+    res.lower_bound = lb
+    return res

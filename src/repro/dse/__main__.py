@@ -10,6 +10,12 @@ Per-(einsum, arch-point) optima persist in the mapping cache
 sweep whose points overlap another space — is served warm.
 ``--check-parity N`` re-runs the first N points exhaustively and verifies
 the pruned explorer returns the identical frontier (the CI smoke gate).
+
+Resilience: ``--deadline S`` / ``--max-expanded N`` bound the whole sweep
+(points past expiry are reported ``skipped_budget``; truncated evaluations
+carry a certified optimality gap); ``--resume`` journals finished work
+units so a Ctrl-C'd sweep — which prints its partial report and exits 130 —
+continues where it stopped on the next identical invocation.
 """
 from __future__ import annotations
 
@@ -74,6 +80,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="record a search trace: *.jsonl for the raw event "
                     "log, anything else for Chrome-trace JSON (Perfetto); "
                     "inspect with python -m repro.obs report PATH")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="wall-clock budget (seconds) for the whole sweep")
+    ap.add_argument("--max-expanded", type=int, default=None, metavar="N",
+                    help="cap on total expanded search nodes for the sweep")
+    ap.add_argument("--resume", action="store_true",
+                    help="journal finished work units under the cache dir; "
+                    "an interrupted sweep resumes mid-search on the next "
+                    "identical invocation")
     ap.add_argument("--verbose", action="store_true")
     return ap
 
@@ -100,12 +114,24 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0 if ok else 1
 
     cache = None if args.no_cache else MappingCache(root=args.cache_dir)
+    budget = None
+    if args.deadline is not None or args.max_expanded is not None:
+        from repro.core.budget import SearchBudget
+        budget = SearchBudget(deadline_s=args.deadline,
+                              max_expanded=args.max_expanded)
+    checkpoint = None
+    if args.resume:
+        from repro.core.journal import SearchCheckpoint
+        checkpoint = SearchCheckpoint(root=args.cache_dir)
+        if len(checkpoint):
+            print(f"resuming: {len(checkpoint)} journaled work units "
+                  f"under {args.cache_dir}", file=sys.stderr)
     tracer = Tracer() if args.trace else None
     common = dict(objective=args.objective, cache=cache,
                   workers=args.workers, max_points=max_points,
                   roofline_order=not args.no_roofline_order,
                   prune=not args.no_prune, verbose=args.verbose,
-                  tracer=tracer)
+                  tracer=tracer, budget=budget, checkpoint=checkpoint)
     if args.network is not None:
         from repro.configs import get_config
 
@@ -129,7 +155,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     if tracer is not None:
         tracer.save(args.trace)
         print(f"  wrote trace {args.trace} ({len(tracer.events)} events)")
-    return 0
+    return 130 if report.interrupted else 0
 
 
 if __name__ == "__main__":

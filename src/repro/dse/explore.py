@@ -46,6 +46,7 @@ import time
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.arch import ArchPoint, ArchSpace
+from repro.core.budget import ensure_meter
 from repro.core.einsum import Einsum
 from repro.core.looptree import render
 from repro.core.mapper import tcm_map
@@ -53,7 +54,7 @@ from repro.core.search import MapperStats, SearchEngine, make_engine
 from repro.obs.tracer import active
 
 from .report import (DSEReport, EVALUATED, INFEASIBLE, PRUNED_BOUND,
-                     PRUNED_ROOFLINE, PointRow)
+                     PRUNED_ROOFLINE, SKIPPED_BUDGET, PointRow)
 from .roofline import RooflineBound, einsum_bounds, workload_bounds
 
 
@@ -104,6 +105,8 @@ def explore_space(
     collect_mappings: bool = True,
     verbose: bool = False,
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> DSEReport:
     """Co-search architectures and mappings for a list of einsums.
 
@@ -112,8 +115,18 @@ def explore_space(
     strictly more expanded nodes.  All backends are value-identical (the
     per-point optima inherit the engines' parity contract; only the
     ``n_expanded`` counters depend on worker scheduling).
+
+    ``budget`` spans the whole sweep: one meter is shared by every point's
+    searches; on expiry in-flight searches return their incumbents
+    (``row.truncated`` + certified ``row.gap_bound``) and unreached points
+    are marked ``skipped_budget``.  ``checkpoint`` journals finished work
+    units so an interrupted sweep resumes mid-search; a ``KeyboardInterrupt``
+    returns the partial report (``interrupted=True``) instead of raising —
+    re-running with the same cache/checkpoint completes the remaining
+    points and reaches the same frontier as an uninterrupted sweep.
     """
     einsums = list(einsums)
+    meter = ensure_meter(budget)
     workload = "+".join(e.name for e in einsums)
     lb_cache: dict = {}  # point key -> per-einsum bounds, computed once
 
@@ -149,18 +162,25 @@ def explore_space(
                 result, stats = tcm_map(
                     e, point.arch, objective=objective,
                     prune_partial=prune_partial, collect_sizes=False,
-                    engine=engine, inc_obj=t_i, tracer=tracer)
+                    engine=engine, inc_obj=t_i, tracer=tracer,
+                    budget=meter)
                 dt = time.perf_counter() - t0
                 row.t_search += dt
                 row.n_expanded += stats.n_expanded
                 if row.stats is None:
                     row.stats = MapperStats()
                 row.stats.merge(stats)
+                if stats.truncated:
+                    row.truncated = True
+                    row.gap_bound = max(row.gap_bound, stats.gap_bound)
                 if result is None and t_i == float("inf"):
+                    if stats.truncated:
+                        raise _Cut  # budget, not infeasibility, emptied it
                     raise _Infeasible  # nothing cut this: no valid mapping
                 if result is None or result.objective(objective) >= t_i:
                     raise _Cut  # provably no better than the incumbent point
-                if cache is not None:
+                # truncated results are anytime incumbents, never cached
+                if cache is not None and not stats.truncated:
                     cache.put(e, point.arch, objective, result, stats, dt,
                               prune_partial)
             parts[i] = result.objective(objective)
@@ -179,7 +199,8 @@ def explore_space(
                   workers=workers, share_incumbents=share_incumbents,
                   roofline_order=roofline_order, prune=prune,
                   seed_incumbents=seed_incumbents, max_points=max_points,
-                  verbose=verbose, tracer=tracer)
+                  verbose=verbose, tracer=tracer, budget=meter,
+                  checkpoint=checkpoint)
 
 
 def explore_space_network(
@@ -200,6 +221,8 @@ def explore_space_network(
     max_points: Optional[int] = None,
     verbose: bool = False,
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> DSEReport:
     """Sweep a space against a whole model config via ``netmap``.
 
@@ -217,6 +240,7 @@ def explore_space_network(
     entries = extract_einsums(cfg, mode=mode, batch=batch, seq=seq)
     lb_entries = [(en.einsum, en.count) for en in entries]
     workload = f"{cfg.name}[{mode},b={batch},s={seq}]"
+    meter = ensure_meter(budget)
 
     def evaluate(point: ArchPoint, row: PointRow, threshold: float,
                  engine: SearchEngine) -> None:
@@ -224,11 +248,15 @@ def explore_space_network(
             rep = map_network(cfg, point.arch, objective=objective,
                               mode=mode, batch=batch, seq=seq, cache=cache,
                               engine=engine, fuse=fuse, verbose=False,
-                              tracer=tracer)
+                              tracer=tracer, budget=meter)
         except NoValidMappingError:
             # exactly the planner's infeasibility signal — engine/pool
             # RuntimeErrors (e.g. BrokenProcessPool) propagate and abort
             raise _Infeasible
+        if rep.interrupted:
+            # the planner caught SIGINT and returned a partial report —
+            # that is not a point evaluation; stop the sweep instead
+            raise KeyboardInterrupt
         row.t_search += rep.t_search
         # NetworkReport.n_evaluated sums the backing searches' n_expanded
         # (cache hits replay the cold search's count — see planner.py)
@@ -238,6 +266,9 @@ def explore_space_network(
         row.latency = rep.total_latency
         row.objective = _combine(rep.total_energy, rep.total_latency,
                                  objective)
+        if rep.truncated:
+            row.truncated = True
+            row.gap_bound = max(row.gap_bound, rep.gap_bound)
 
     return _sweep(space, workload, objective, evaluate,
                   lambda p: workload_bounds(lb_entries, p.arch),
@@ -245,14 +276,16 @@ def explore_space_network(
                   workers=workers, share_incumbents=share_incumbents,
                   roofline_order=roofline_order, prune=prune,
                   seed_incumbents=False,  # map_network has no seeding hook
-                  max_points=max_points, verbose=verbose, tracer=tracer)
+                  max_points=max_points, verbose=verbose, tracer=tracer,
+                  budget=meter, checkpoint=checkpoint)
 
 
 def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
            engine, backend, workers, share_incumbents, roofline_order,
            prune, seed_incumbents, max_points, verbose,
-           tracer=None) -> DSEReport:
+           tracer=None, budget=None, checkpoint=None) -> DSEReport:
     tracer = active(tracer)
+    meter = ensure_meter(budget)
     t0 = time.perf_counter()
     t_wall0 = time.time() if tracer is not None else 0.0
     points, counters = space.materialize(max_points=max_points)
@@ -275,12 +308,21 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(backend, workers,
-                             share_incumbents=share_incumbents)
+                             share_incumbents=share_incumbents,
+                             checkpoint=checkpoint)
 
     evaluated: List[PointRow] = []
     try:
         for point, row in rows:
             report.rows.append(row)
+            if meter is not None and meter.expired():
+                row.status = SKIPPED_BUDGET
+                report.n_skipped_budget += 1
+                report.truncated = True
+                if tracer is not None:
+                    tracer.instant("skipped_budget", cat="budget",
+                                   point=row.coords or row.name)
+                continue
             if prune and _dominated_by_evaluated(row, evaluated):
                 row.status = PRUNED_ROOFLINE
                 report.n_pruned_roofline += 1
@@ -327,6 +369,9 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
             evaluated.append(row)
             report.n_evaluated += 1
             report.t_search += row.t_search
+            if row.truncated:
+                report.truncated = True
+                report.gap_bound = max(report.gap_bound, row.gap_bound)
             if tracer is not None:
                 tracer.instant("evaluated", cat="dse",
                                point=row.coords or row.name,
@@ -340,6 +385,13 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
                 print(f"  {row.coords:<44} {objective}="
                       f"{row.objective:.4g} area={row.area_mm2:.2f}mm2 "
                       f"({row.cached} cached, {row.t_search:.2f}s)")
+    except KeyboardInterrupt:
+        # partial sweep: finalize what finished; a re-run with the same
+        # cache/checkpoint completes the remaining points
+        report.interrupted = True
+        if tracer is not None:
+            tracer.instant("interrupted", cat="fault", space=space.name,
+                           n_evaluated=report.n_evaluated)
     finally:
         if owns_engine:
             engine.close()
@@ -351,6 +403,12 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
     report.finalize_frontier()
     report.t_total = time.perf_counter() - t0
     if tracer is not None:
+        extra = {}
+        if report.truncated:
+            extra.update(truncated=True, gap_bound=report.gap_bound,
+                         n_skipped_budget=report.n_skipped_budget)
+        if report.interrupted:
+            extra.update(interrupted=True)
         tracer.complete(
             f"explore_space:{space.name}", t_wall0, cat="driver",
             backend=engine.backend, workload=workload,
@@ -358,7 +416,7 @@ def _sweep(space, workload, objective, evaluate, point_bounds, *, cache,
             n_pruned_roofline=report.n_pruned_roofline,
             n_pruned_bound=report.n_pruned_bound,
             n_expanded=report.n_expanded,
-            best=report.best.name if report.best else None)
+            best=report.best.name if report.best else None, **extra)
     return report
 
 

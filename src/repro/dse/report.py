@@ -25,6 +25,7 @@ EVALUATED = "evaluated"
 PRUNED_ROOFLINE = "pruned_roofline"  # dominated before any search
 PRUNED_BOUND = "pruned_bound"  # cut during search by the seeded incumbent
 INFEASIBLE = "infeasible"  # proven: no valid mapping (searched unbounded)
+SKIPPED_BUDGET = "skipped_budget"  # search budget expired before this point
 
 
 def pareto_keep(points: Sequence[Tuple[float, ...]]) -> List[bool]:
@@ -70,6 +71,10 @@ class PointRow:
     stats: Optional[MapperStats] = None
     # per-einsum optimal mappings, rendered (evaluated points only)
     mappings: Dict[str, str] = field(default_factory=dict)
+    # resilience: the point's searches hit their budget — its totals are
+    # anytime incumbents within gap_bound of the point's true optimum
+    truncated: bool = False
+    gap_bound: float = 1.0
 
 
 @dataclass
@@ -89,11 +94,19 @@ class DSEReport:
     n_pruned_roofline: int = 0
     n_pruned_bound: int = 0
     n_infeasible: int = 0
+    n_skipped_budget: int = 0  # points never searched: budget expired first
     cache_hits: int = 0
     cache_misses: int = 0
     n_expanded: int = 0  # total branch-and-bound expansions across points
     t_search: float = 0.0  # seconds in cold mapping searches
     t_total: float = 0.0
+    # resilience: truncated = some search hit its budget (frontier/best are
+    # over anytime values); interrupted = SIGINT cut the sweep short
+    # (rows cover only the points reached); gap_bound = worst per-point
+    # certified optimality factor among truncated evaluations
+    truncated: bool = False
+    gap_bound: float = 1.0
+    interrupted: bool = False
 
     @property
     def n_points(self) -> int:
@@ -135,6 +148,7 @@ class DSEReport:
                     "stats": (r.stats.to_dict()
                               if r.stats is not None else None),
                     "mappings": r.mappings,
+                    "truncated": r.truncated, "gap_bound": r.gap_bound,
                 }
                 for r in self.rows
             ],
@@ -152,11 +166,15 @@ class DSEReport:
                 "n_pruned_roofline": self.n_pruned_roofline,
                 "n_pruned_bound": self.n_pruned_bound,
                 "n_infeasible": self.n_infeasible,
+                "n_skipped_budget": self.n_skipped_budget,
                 "n_expanded": self.n_expanded,
             },
             "cache": {"hits": self.cache_hits, "misses": self.cache_misses},
             "timing": {"t_search_s": self.t_search,
                        "t_total_s": self.t_total},
+            "resilience": {"truncated": self.truncated,
+                           "gap_bound": self.gap_bound,
+                           "interrupted": self.interrupted},
         }
 
     def render(self) -> str:
@@ -173,7 +191,9 @@ class DSEReport:
             f"{self.n_pruned_roofline} pruned by roofline dominance, "
             f"{self.n_pruned_bound} pruned by seeded bound"
             + (f", {self.n_infeasible} infeasible"
-               if self.n_infeasible else ""),
+               if self.n_infeasible else "")
+            + (f", {self.n_skipped_budget} skipped (budget expired)"
+               if self.n_skipped_budget else ""),
             "",
             f"  {'point':<44} {'area':>8} {'PEs':>6} {'energy(pJ)':>11} "
             f"{'latency(s)':>11} {self.objective:>11} {'status':>16} "
@@ -209,4 +229,13 @@ class DSEReport:
             f"  time: {self.t_search:.3f}s searching, "
             f"{self.t_total:.3f}s total",
         ]
+        if self.interrupted:
+            out.append("  INTERRUPTED: partial sweep (points after the "
+                       "interrupt were not reached)")
+        if self.truncated:
+            gap = ("inf" if self.gap_bound == float("inf")
+                   else f"{self.gap_bound:.4g}")
+            out.append(f"  ANYTIME: search budget expired; evaluated "
+                       f"points certified within {gap}x of their true "
+                       f"optima")
         return "\n".join(out)

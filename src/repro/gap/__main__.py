@@ -70,6 +70,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="soundness: number of fuzz cases (default: 200)")
     ap.add_argument("--time-budget", type=float, default=None, metavar="S",
                     help="soundness: stop drawing new cases after S seconds")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="soundness: alias for --time-budget (the "
+                    "repo-wide anytime flag)")
+    ap.add_argument("--resume", action="store_true",
+                    help="soundness: journal finished cases under "
+                    "--cache-dir; an interrupted campaign (Ctrl-C, "
+                    "deadline) continues where it stopped on the next "
+                    "identical invocation")
+    ap.add_argument("--cache-dir", default=".tcm_cache",
+                    help="directory for the --resume journal")
     ap.add_argument("--no-oracle", action="store_true",
                     help="soundness: skip the brute-force cross-check")
     ap.add_argument("--repro-prefix", default="gap_violation",
@@ -106,12 +116,22 @@ def main() -> int:
         return 1 if violations else 0
 
     if args.mode == "soundness":
+        time_budget = (args.time_budget if args.time_budget is not None
+                       else args.deadline)
+        journal = None
+        if args.resume:
+            import os
+            journal = os.path.join(
+                args.cache_dir, f"gap_fuzz_seed{args.seed}.jsonl")
         report = snd.fuzz(args.cases, seed=args.seed,
                           oracle=not args.no_oracle,
-                          time_budget_s=args.time_budget, verbose=True)
+                          time_budget_s=time_budget, verbose=True,
+                          journal_path=journal)
+        resumed = (f", {report.n_resumed} resumed from journal"
+                   if report.n_resumed else "")
         print(f"soundness fuzz: {report.n_cases} cases "
               f"({report.n_oracle_checked} oracle-checked, "
-              f"{report.n_baseline_runs} baseline runs) in "
+              f"{report.n_baseline_runs} baseline runs{resumed}) in "
               f"{report.wall_s:.1f}s — "
               f"{'OK' if report.ok else 'VIOLATIONS FOUND'}")
         for i, v in enumerate(report.violations):

@@ -98,6 +98,7 @@ class FuzzReport:
     n_cases: int = 0
     n_oracle_checked: int = 0
     n_baseline_runs: int = 0
+    n_resumed: int = 0  # cases served from a resume journal, not re-run
     wall_s: float = 0.0
     violations: List[SoundnessViolation] = field(default_factory=list)
 
@@ -111,6 +112,7 @@ class FuzzReport:
             "n_cases": self.n_cases,
             "n_oracle_checked": self.n_oracle_checked,
             "n_baseline_runs": self.n_baseline_runs,
+            "n_resumed": self.n_resumed,
             "wall_s": round(self.wall_s, 3),
             "ok": self.ok,
             "violations": [v.to_dict() for v in self.violations],
@@ -263,33 +265,93 @@ def minimize_case(case: FuzzCase, max_steps: int = 32) -> FuzzCase:
     return cur
 
 
+def _load_fuzz_journal(path: str, seed: int) -> Dict[int, dict]:
+    """Clean finished-case records from a resume journal (torn/corrupt
+    lines and other seeds' records are skipped; violating cases are NOT
+    served — a resumed run re-checks them so violations are regenerated,
+    never trusted from disk)."""
+    import os
+    done: Dict[int, dict] = {}
+    if not path or not os.path.exists(path):
+        return done
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue  # torn trailing line
+            if (isinstance(rec, dict) and rec.get("seed") == seed
+                    and rec.get("ok") and isinstance(rec.get("i"), int)):
+                done[rec["i"]] = rec
+    return done
+
+
 def fuzz(n_cases: int, seed: int = 0,
          objectives: Sequence[str] = OBJECTIVES,
          oracle: bool = True,
          time_budget_s: Optional[float] = None,
          minimize: bool = True,
-         verbose: bool = False) -> FuzzReport:
-    """Run ``n_cases`` fuzz draws (round-robin over ``objectives``)."""
+         verbose: bool = False,
+         journal_path: Optional[str] = None) -> FuzzReport:
+    """Run ``n_cases`` fuzz draws (round-robin over ``objectives``).
+
+    ``journal_path`` makes the campaign resumable: every finished case
+    appends one durable JSON line, and a later call with the same ``seed``
+    skips the cases already proven clean (their counters fold into the
+    report with ``n_resumed``).  The RNG is still advanced through skipped
+    draws, so case ``i`` is identical whether or not the run was
+    interrupted.
+    """
+    import os
     rng = random.Random(seed)
     report = FuzzReport()
+    done = _load_fuzz_journal(journal_path, seed) if journal_path else {}
+    jf = None
+    if journal_path:
+        os.makedirs(os.path.dirname(journal_path) or ".", exist_ok=True)
+        jf = open(journal_path, "a", encoding="utf-8")
     t0 = time.perf_counter()
-    for i in range(n_cases):
-        if time_budget_s is not None and \
-                time.perf_counter() - t0 > time_budget_s:
-            break
-        case = random_case(rng, objective=objectives[i % len(objectives)])
-        vs, n_runs = check_case(case, oracle=oracle)
-        report.n_cases += 1
-        report.n_oracle_checked += 1 if oracle else 0
-        report.n_baseline_runs += n_runs
-        for v in vs:
-            if minimize:
-                v.minimized = minimize_case(case)
-            report.violations.append(v)
-        if verbose and (i + 1) % 25 == 0:
-            print(f"# fuzz: {i + 1}/{n_cases} cases, "
-                  f"{len(report.violations)} violation(s), "
-                  f"{time.perf_counter() - t0:.1f}s", flush=True)
+    try:
+        for i in range(n_cases):
+            if time_budget_s is not None and \
+                    time.perf_counter() - t0 > time_budget_s:
+                break
+            # the draw must happen even for resumed cases: it advances the
+            # RNG, keeping every later case bit-identical to an
+            # uninterrupted run
+            case = random_case(rng,
+                               objective=objectives[i % len(objectives)])
+            rec = done.get(i)
+            if rec is not None:
+                report.n_cases += 1
+                report.n_resumed += 1
+                report.n_oracle_checked += 1 if rec.get("oracle") else 0
+                report.n_baseline_runs += int(rec.get("n_runs", 0))
+                continue
+            vs, n_runs = check_case(case, oracle=oracle)
+            report.n_cases += 1
+            report.n_oracle_checked += 1 if oracle else 0
+            report.n_baseline_runs += n_runs
+            for v in vs:
+                if minimize:
+                    v.minimized = minimize_case(case)
+                report.violations.append(v)
+            if jf is not None:
+                jf.write(json.dumps({"seed": seed, "i": i, "ok": not vs,
+                                     "oracle": oracle, "n_runs": n_runs},
+                                    separators=(",", ":")) + "\n")
+                jf.flush()
+                os.fsync(jf.fileno())
+            if verbose and (i + 1) % 25 == 0:
+                print(f"# fuzz: {i + 1}/{n_cases} cases, "
+                      f"{len(report.violations)} violation(s), "
+                      f"{time.perf_counter() - t0:.1f}s", flush=True)
+    finally:
+        if jf is not None:
+            jf.close()
     report.wall_s = time.perf_counter() - t0
     return report
 

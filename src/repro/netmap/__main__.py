@@ -9,6 +9,12 @@ The first invocation searches each unique einsum cold and persists the
 optima under ``--cache-dir`` (default ``.tcm_cache/``); later invocations
 with the same (config, arch, shape, objective) are served from the cache in
 milliseconds — the report prints the hit rate and timing either way.
+
+Resilience: ``--deadline S`` / ``--max-expanded N`` bound the whole run
+(anytime report with a certified per-search optimality gap on expiry);
+``--resume`` journals finished work units under the cache dir and resumes
+an interrupted run mid-search; Ctrl-C prints the best-so-far report
+(exit code 130) instead of a traceback.
 """
 from __future__ import annotations
 
@@ -70,6 +76,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="record a search trace: *.jsonl for the raw event "
                     "log, anything else for Chrome-trace JSON (Perfetto); "
                     "inspect with python -m repro.obs report PATH")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="wall-clock budget (seconds) for the whole run; "
+                    "on expiry the best mappings found so far are reported "
+                    "with a certified optimality gap")
+    ap.add_argument("--max-expanded", type=int, default=None, metavar="N",
+                    help="cap on total expanded search nodes across the run "
+                    "(anytime semantics, same as --deadline)")
+    ap.add_argument("--resume", action="store_true",
+                    help="journal finished work units under the cache dir "
+                    "and serve them on the next identical invocation "
+                    "(resume an interrupted run mid-search)")
     ap.add_argument("--verbose", action="store_true")
     return ap
 
@@ -88,13 +105,27 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"warning: skipped {cache.n_corrupt} corrupt cache line(s)",
               file=sys.stderr)
 
+    budget = None
+    if args.deadline is not None or args.max_expanded is not None:
+        from repro.core.budget import SearchBudget
+        budget = SearchBudget(deadline_s=args.deadline,
+                              max_expanded=args.max_expanded)
+    checkpoint = None
+    if args.resume:
+        from repro.core.journal import SearchCheckpoint
+        checkpoint = SearchCheckpoint(root=args.cache_dir)
+        if len(checkpoint):
+            print(f"resuming: {len(checkpoint)} journaled work units "
+                  f"under {args.cache_dir}", file=sys.stderr)
+
     tracer = Tracer() if args.trace else None
     report = map_network(cfg, arch, objective=args.objective, mode=args.mode,
                          batch=args.batch, seq=args.seq, cache=cache,
                          workers=args.workers,
                          share_incumbents=not args.no_share_incumbents,
                          fuse=not args.no_fuse,
-                         verbose=args.verbose, tracer=tracer)
+                         verbose=args.verbose, tracer=tracer,
+                         budget=budget, checkpoint=checkpoint)
     print(report.render())
     if cache is not None:
         # the report line above shows this call's deltas; this one adds the
@@ -114,7 +145,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     if tracer is not None:
         tracer.save(args.trace)
         print(f"  wrote trace {args.trace} ({len(tracer.events)} events)")
-    return 0
+    return 130 if report.interrupted else 0
 
 
 if __name__ == "__main__":

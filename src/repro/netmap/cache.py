@@ -20,10 +20,14 @@ Design points:
     go through JSON's shortest-repr encoding, which round-trips Python
     floats bit-exactly — a cache hit returns a ``MappingResult`` identical
     to the cold search's (tested in ``tests/test_netmap_cache.py``).
-  * **Append-only JSON-lines.** Each ``put`` appends one line; loading
-    tolerates corrupt or truncated lines (counted in ``n_corrupt``,
-    skipped) and duplicate keys (last write wins), so a crash mid-append
-    can't poison the store.
+  * **Append-only JSON-lines, torn-write safe.** Each ``put`` appends one
+    line with flush + fsync, so a crash *after* a put cannot lose it and a
+    crash *during* one leaves at most a single torn trailing line.  Loading
+    tolerates corrupt or truncated lines as a backstop — they are counted
+    (``n_corrupt``/``n_quarantined``), moved to a ``.quarantine`` side file
+    for post-mortems, and the store is compacted in place (atomic temp +
+    rename) so the damage never survives a reload.  Duplicate keys: last
+    write wins.
 """
 from __future__ import annotations
 
@@ -36,10 +40,22 @@ from typing import Dict, Optional, Union
 
 from repro.core.arch import Arch, arch_key
 from repro.core.einsum import Einsum
-from repro.core.fusion import FusedMapping, FusedWorkload
-from repro.core.looptree import Loop, Mapping, Storage
-from repro.core.search import (MapperStats, MappingResult, einsum_key,
-                               stats_from_dict)
+from repro.core.fusion import FusedWorkload
+from repro.core.search import MapperStats, MappingResult, einsum_key
+# wire helpers grew out of this module; they now live in core (the search
+# checkpoint journal shares them) and are re-exported here for compatibility
+from repro.core.wire import (fused_mapping_from_wire, fused_mapping_to_wire,
+                             mapping_from_wire, mapping_to_wire,
+                             result_from_wire, result_to_wire,
+                             stats_from_wire, stats_to_wire)
+
+__all__ = [
+    "CACHE_VERSION", "DEFAULT_ROOT", "CacheHit", "MappingCache",
+    "compute_key", "compute_group_key",
+    "mapping_to_wire", "mapping_from_wire", "fused_mapping_to_wire",
+    "fused_mapping_from_wire", "result_to_wire", "result_from_wire",
+    "stats_to_wire", "stats_from_wire",
+]
 
 # v2: two-phase shared-incumbent search — optimum *values* are unchanged,
 # but a value-tied optimal mapping can be tie-broken differently than the
@@ -55,88 +71,6 @@ from repro.core.search import (MapperStats, MappingResult, einsum_key,
 # cross tool and naming boundaries; old name-keyed entries are invalidated.
 CACHE_VERSION = 4
 DEFAULT_ROOT = ".tcm_cache"
-
-
-# --------------------------------------------------------------------------
-# Wire format (JSON-safe) <-> core dataclasses
-# --------------------------------------------------------------------------
-
-
-def mapping_to_wire(mapping: Mapping) -> list:
-    out = []
-    for n in mapping:
-        if isinstance(n, Storage):
-            out.append(["S", n.level, n.tensor])
-        else:
-            out.append(["L", n.var, n.bound, int(n.spatial), n.fanout, n.dim])
-    return out
-
-
-def mapping_from_wire(wire: list) -> Mapping:
-    nodes = []
-    for rec in wire:
-        if rec[0] == "S":
-            nodes.append(Storage(int(rec[1]), rec[2]))
-        elif rec[0] == "L":
-            nodes.append(Loop(rec[1], int(rec[2]), bool(rec[3]),
-                              int(rec[4]), int(rec[5])))
-        else:
-            raise ValueError(f"unknown mapping node tag {rec[0]!r}")
-    return tuple(nodes)
-
-
-def fused_mapping_to_wire(fm: FusedMapping) -> dict:
-    return {
-        "members": [mapping_to_wire(m) for m in fm.members],
-        "pin_level": fm.pin_level,
-        "pinned": [[i, t] for i, t in fm.pinned],
-    }
-
-
-def fused_mapping_from_wire(wire: dict) -> FusedMapping:
-    return FusedMapping(
-        members=tuple(mapping_from_wire(m) for m in wire["members"]),
-        pin_level=int(wire["pin_level"]),
-        pinned=tuple((int(i), t) for i, t in wire["pinned"]),
-    )
-
-
-def result_to_wire(result: MappingResult) -> dict:
-    if isinstance(result.mapping, FusedMapping):
-        mapping = {"fused": fused_mapping_to_wire(result.mapping)}
-    else:
-        mapping = mapping_to_wire(result.mapping)
-    return {
-        "mapping": mapping,
-        "energy": result.energy,
-        "latency": result.latency,
-        "edp": result.edp,
-    }
-
-
-def result_from_wire(wire: dict) -> MappingResult:
-    raw = wire["mapping"]
-    if isinstance(raw, dict):
-        mapping = fused_mapping_from_wire(raw["fused"])
-    else:
-        mapping = mapping_from_wire(raw)
-    return MappingResult(
-        mapping=mapping,
-        energy=wire["energy"],
-        latency=wire["latency"],
-        edp=wire["edp"],
-    )
-
-
-# stats ride the canonical MapperStats serialization (to_dict /
-# stats_from_dict), shared with benchmark --json payloads and dse reports;
-# these aliases keep the wire-format vocabulary of this module uniform
-def stats_to_wire(stats: MapperStats) -> dict:
-    return stats.to_dict()
-
-
-def stats_from_wire(wire: dict) -> MapperStats:
-    return stats_from_dict(wire)
 
 
 # --------------------------------------------------------------------------
@@ -208,10 +142,13 @@ class MappingCache:
                  filename: str = "mappings.jsonl"):
         self.root = Path(root)
         self.path = self.root / filename
+        self.quarantine_path = self.path.with_suffix(
+            self.path.suffix + ".quarantine")
         self._entries: Dict[str, dict] = {}
         self.hits = 0
         self.misses = 0
-        self.n_corrupt = 0
+        self.n_corrupt = 0  # lifetime total, incl. malformed-entry drops
+        self.n_quarantined = 0  # corrupt *lines* moved aside at load
         self._load()
 
     # -- persistence -------------------------------------------------------
@@ -219,27 +156,52 @@ class MappingCache:
     def _load(self) -> None:
         if not self.path.exists():
             return
+        surviving: list = []  # raw lines to keep on compaction
+        quarantined: list = []
         with open(self.path, "r", encoding="utf-8") as f:
             for line in f:
-                line = line.strip()
-                if not line:
+                stripped = line.strip()
+                if not stripped:
                     continue
                 try:
-                    rec = json.loads(line)
+                    rec = json.loads(stripped)
                     if not isinstance(rec, dict) or any(
                             k not in rec for k in _REQUIRED):
                         raise ValueError("missing required fields")
                 except (ValueError, TypeError):
                     self.n_corrupt += 1
+                    quarantined.append(stripped)
                     continue
+                surviving.append(stripped)
                 if rec["v"] != CACHE_VERSION:
                     continue  # older format: invalidated, not corrupt
                 self._entries[rec["key"]] = rec  # duplicate keys: last wins
+        if quarantined:
+            # move the damage aside for post-mortems, then compact the
+            # store atomically so the torn lines never survive a reload
+            self.n_quarantined += len(quarantined)
+            with open(self.quarantine_path, "a", encoding="utf-8") as f:
+                for line in quarantined:
+                    f.write(line + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+            with open(tmp, "w", encoding="utf-8") as f:
+                for line in surviving:
+                    f.write(line + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
 
     def _append(self, rec: dict) -> None:
+        """Durable append: flush + fsync, so a crash after ``put`` returns
+        cannot lose the entry and a crash mid-write can at worst leave one
+        torn trailing line (quarantined and compacted away on next load)."""
         os.makedirs(self.root, exist_ok=True)
         with open(self.path, "a", encoding="utf-8") as f:
             f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
 
     # -- API ---------------------------------------------------------------
 
@@ -335,6 +297,8 @@ class MappingCache:
         self._entries.clear()
         if self.path.exists():
             self.path.unlink()
+        if self.quarantine_path.exists():
+            self.quarantine_path.unlink()
 
     @property
     def hit_rate(self) -> float:

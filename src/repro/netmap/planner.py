@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.arch import Arch
+from repro.core.budget import ensure_meter
 from repro.obs.tracer import active
 from repro.core.fusion import from_group, workload_key
 from repro.core.mapper import tcm_map, tcm_map_group
@@ -137,6 +138,15 @@ class NetworkReport:
     cache_misses: int = 0
     t_search: float = 0.0  # seconds spent in cold searches
     t_total: float = 0.0  # wall seconds of the whole planner call
+    # resilience: True when any composing search hit its budget; gap_bound
+    # is the worst per-unique-search certified optimality factor (each
+    # deduplicated search's objective is within this factor of its true
+    # optimum; inf when a truncated search certifies nothing).
+    truncated: bool = False
+    gap_bound: float = 1.0
+    # True when the planner was interrupted (SIGINT): rows/totals cover
+    # only the layer ops whose searches finished — a best-so-far report.
+    interrupted: bool = False
 
     @property
     def cache_hit_rate(self) -> float:
@@ -190,6 +200,9 @@ class NetworkReport:
             "cache": {"hits": self.cache_hits, "misses": self.cache_misses,
                       "hit_rate": self.cache_hit_rate},
             "timing": {"t_search_s": self.t_search, "t_total_s": self.t_total},
+            "resilience": {"truncated": self.truncated,
+                           "gap_bound": self.gap_bound,
+                           "interrupted": self.interrupted},
         }
 
     def render(self) -> str:
@@ -243,6 +256,14 @@ class NetworkReport:
             f"  time: {self.t_search:.3f}s searching, "
             f"{self.t_total:.3f}s total",
         ]
+        if self.interrupted:
+            out.append("  INTERRUPTED: totals cover only the finished "
+                       "searches (best-so-far report)")
+        if self.truncated:
+            gap = ("inf" if self.gap_bound == float("inf")
+                   else f"{self.gap_bound:.4g}")
+            out.append(f"  ANYTIME: search budget expired; per-search "
+                       f"optima certified within {gap}x of true optimum")
         return "\n".join(out)
 
 
@@ -267,6 +288,8 @@ def map_network(
     max_group: int = 3,
     verbose: bool = False,
     tracer=None,
+    budget=None,
+    checkpoint=None,
 ) -> NetworkReport:
     """Map every layer of ``cfg`` on ``arch`` and compose the network report.
 
@@ -293,10 +316,23 @@ def map_network(
     per unique lookup (plus ``negative`` for fused groups cached as
     unmappable) and one ``adopted``/``rejected`` instant per fusion-group
     decision.  Observational only — reports are identical traced or not.
+
+    ``budget`` (a :class:`~repro.core.budget.SearchBudget` or ``None``)
+    spans the *whole model*: one meter is shared by every composing search,
+    so a 60-second deadline bounds the full planner call, not each layer.
+    Truncated searches return their best incumbent; the report carries
+    ``truncated=True`` and the worst per-search certified ``gap_bound``.
+    ``checkpoint`` journals finished work units so an interrupted run
+    resumes mid-search (the :class:`MappingCache` already resumes at
+    whole-einsum granularity); honored only when this call creates its own
+    engine.  ``KeyboardInterrupt`` (SIGINT) returns a best-so-far report
+    (``interrupted=True``, totals over the finished searches only) instead
+    of propagating.
     """
     tracer = active(tracer)
     t0 = time.perf_counter()
     t_wall = time.time() if tracer is not None else 0.0
+    meter = ensure_meter(budget)
     if fuse:
         ng = extract_graph(cfg, mode=mode, batch=batch, seq=seq)
         entries = ng.entries
@@ -306,7 +342,8 @@ def map_network(
     owns_engine = engine is None
     if owns_engine:
         engine = make_engine(None, workers,
-                             share_incumbents=share_incumbents)
+                             share_incumbents=share_incumbents,
+                             checkpoint=checkpoint)
     # hit/miss counters are per-cache-instance lifetime totals; snapshot them
     # so the report shows this call's deltas even on a reused cache object
     hits0 = cache.hits if cache is not None else 0
@@ -346,15 +383,24 @@ def map_network(
                 result, stats = tcm_map(exemplar.einsum, arch,
                                         objective=objective,
                                         prune_partial=prune_partial,
-                                        engine=engine, tracer=tracer)
+                                        engine=engine, tracer=tracer,
+                                        budget=meter)
                 t_search = time.perf_counter() - t1
                 if result is None:
                     raise NoValidMappingError(
                         f"no valid mapping for {exemplar.einsum.name} on "
-                        f"{arch.name}")
+                        f"{arch.name}"
+                        + (" (search budget expired before any mapping "
+                           "was found)" if stats.truncated else ""))
                 report.t_search += t_search
+                if stats.truncated:
+                    report.truncated = True
+                    report.gap_bound = max(report.gap_bound,
+                                           stats.gap_bound)
                 cached = False
-                if cache is not None:
+                # truncated results are anytime incumbents, not optima —
+                # never cache them as the shape's answer
+                if cache is not None and not stats.truncated:
                     cache.put(exemplar.einsum, arch, objective, result,
                               stats, t_search, prune_partial)
             u = UniqueSearch(op=exemplar.op, shape=_shape_desc(exemplar),
@@ -376,7 +422,14 @@ def map_network(
         if fuse:
             _map_fusion_groups(ng, arch, objective, prune_partial, cache,
                                engine, max_group, searched, report,
-                               adopted_member, verbose, tracer=tracer)
+                               adopted_member, verbose, tracer=tracer,
+                               budget=meter)
+    except KeyboardInterrupt:
+        # best-so-far report: compose what finished, flag the rest
+        report.interrupted = True
+        if tracer is not None:
+            tracer.instant("interrupted", cat="fault", config=cfg.name,
+                           n_finished=len(report.unique))
     finally:
         # engines we created are torn down even when a search raises;
         # caller-provided engines stay open for reuse
@@ -384,6 +437,8 @@ def map_network(
             engine.close()
 
     for entry in entries:
+        if einsum_key(entry.einsum) not in searched:
+            continue  # interrupted before this op's search finished
         name = entry.einsum.name
         if name in adopted_member:
             first, frow = adopted_member[name]
@@ -416,19 +471,24 @@ def map_network(
         report.cache_misses = len(report.unique) + len(report.fused)
     report.t_total = time.perf_counter() - t0
     if tracer is not None:
+        extra = {}
+        if report.truncated:
+            extra.update(truncated=True, gap_bound=report.gap_bound)
+        if report.interrupted:
+            extra.update(interrupted=True)
         tracer.complete(
             f"map_network:{cfg.name}", t_wall, cat="driver",
             backend=engine.backend, arch=arch.name, mode=mode,
             n_layer_ops=len(report.rows), n_unique=len(report.unique),
             n_fused=len(report.fused), edp=report.total_edp,
             cache_hits=report.cache_hits,
-            cache_misses=report.cache_misses)
+            cache_misses=report.cache_misses, **extra)
     return report
 
 
 def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                        max_group, searched, report, adopted_member,
-                       verbose, tracer=None) -> None:
+                       verbose, tracer=None, budget=None) -> None:
     """Joint-search the workload graph's fusion groups.
 
     Each structurally distinct group is searched once (dedup by member
@@ -473,11 +533,15 @@ def _map_fusion_groups(ng, arch, objective, prune_partial, cache, engine,
                 result, stats = tcm_map_group(
                     w, arch, objective=objective,
                     prune_partial=prune_partial, engine=engine,
-                    inc_obj=bound, tracer=tracer)
+                    inc_obj=bound, tracer=tracer, budget=budget)
                 t_search = time.perf_counter() - t1
                 report.t_search += t_search
+                if stats.truncated:
+                    report.truncated = True
+                    report.gap_bound = max(report.gap_bound,
+                                           stats.gap_bound)
                 cached = False
-                if cache is not None:
+                if cache is not None and not stats.truncated:
                     cache.put_group(w, arch, objective, result, stats,
                                     t_search, prune_partial)
             adopted = (result is not None

@@ -47,6 +47,10 @@ CAT_INCUMBENT = "incumbent"  # global bound tightenings
 CAT_CACHE = "cache"  # MappingCache hit / miss / negative-entry events
 CAT_FUSION = "fusion"  # per-group fusion adoption decisions
 CAT_DSE = "dse"  # per-arch-point outcomes in a design-space sweep
+CAT_BUDGET = "budget"  # anytime-search events: expiry, skipped points
+CAT_FAULT = "fault"  # resilience events: retries, pool restarts,
+#                      serial fallbacks, quarantines, interrupts
+CAT_CHECKPOINT = "checkpoint"  # journal resume hits
 
 
 class NullTracer:

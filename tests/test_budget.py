@@ -1,0 +1,233 @@
+"""Anytime-search budgets: semantics, no-budget bit-identity, soundness.
+
+Three contracts from the resilience layer:
+
+  * **Off-path identity** — ``budget=None`` (and a never-expiring budget)
+    leaves mappings *and* stats bit-identical to the historical search on
+    both backends: the metering is observation-only until it fires.
+  * **Anytime validity** — a truncated run returns a structurally valid
+    mapping whose objective is >= the true optimum (it is a real evaluated
+    mapping, never an extrapolation), with ``stats.truncated`` set.
+  * **Certificate soundness** — when ``gap_bound`` is finite, the true
+    optimum (brute-force oracle) is >= best/gap_bound: the bound really is
+    a proof, not a heuristic report.
+"""
+import pytest
+
+from repro.core.arch import Arch, MemLevel, SpatialFanout
+from repro.core.bruteforce import brute_force_optimum
+from repro.core.budget import (BudgetMeter, SearchBudget, SharedBudgetMeter,
+                               ensure_meter)
+from repro.core.einsum import conv1d, matmul
+from repro.core.looptree import validate_structure
+from repro.core.mapper import tcm_map
+from repro.core.search import clear_search_caches
+
+CASES = [
+    ("matmul", matmul("mm", 4, 4, 4),
+     Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                MemLevel("GLB", 12, 1, 1, 1e9)), mac_energy=0.5)),
+    ("conv", conv1d("cv", P=4, R=3, C=2, Kc=2),
+     Arch("a", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                MemLevel("GLB", 16, 1, 1, 1e9)), mac_energy=0.5)),
+    ("spatial", matmul("mm", 2, 4, 2),
+     Arch("sp", (MemLevel("DRAM", float("inf"), 100, 100, 1e8),
+                 MemLevel("GLB", 24, 1, 1, 1e9)),
+          fanouts=(SpatialFanout(above_level=0, dims=(2, 2),
+                                 multicast_tensor=("A", None),
+                                 reduce_tensor=(None, "Z")),),
+          mac_energy=0.5)),
+]
+
+# a budget that can never fire within a test run: the off-path contract
+# must hold whether no meter exists or a meter exists but never expires
+GENEROUS = SearchBudget(deadline_s=3600.0, max_expanded=10 ** 12)
+
+RTOL = 1e-9
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_search_caches()
+    yield
+    clear_search_caches()
+
+
+def _stats_sig(stats):
+    """Full stats record minus wall-clock timings (those legitimately
+    drift run to run)."""
+    return {k: v for k, v in stats.to_dict().items()
+            if not k.startswith("t_")}
+
+
+# --------------------------------------------------------------------------
+# meter unit semantics
+# --------------------------------------------------------------------------
+
+
+def test_budget_meter_accounting():
+    m = SearchBudget(max_expanded=10).start()
+    assert isinstance(m, BudgetMeter)
+    assert not m.expired() and m.remaining_nodes() == 10
+    m.charge(4)
+    assert m.remaining_nodes() == 6 and not m.expired()
+    m.charge(6)
+    assert m.remaining_nodes() == 0 and m.expired()
+    m.charge(5)  # over-draw clamps, never goes negative
+    assert m.remaining_nodes() == 0 and m.expired()
+
+
+def test_budget_meter_deadline():
+    m = SearchBudget(deadline_s=0.0).start()
+    assert m.expired()
+    assert m.remaining_nodes() is None  # unbounded on the node axis
+    m2 = SearchBudget(deadline_s=3600.0).start()
+    assert not m2.expired()
+
+
+def test_noop_budget_never_expires():
+    m = SearchBudget().start()
+    m.charge(10 ** 9)
+    assert not m.expired()
+    assert m.remaining_nodes() is None and m.deadline_epoch is None
+
+
+def test_ensure_meter_normalization():
+    assert ensure_meter(None) is None
+    m = ensure_meter(SearchBudget(max_expanded=5))
+    assert isinstance(m, BudgetMeter)
+    # a live meter passes through untouched: one meter spans many searches
+    assert ensure_meter(m) is m
+
+
+def test_shared_budget_meter_mirrors_driver_view():
+    import multiprocessing as mp
+
+    deadline = mp.Value("d", float("inf"), lock=False)
+    cap = mp.Value("q", 10, lock=False)
+    nodes = mp.Value("q", 0)
+    m = SharedBudgetMeter(deadline, cap, nodes)
+    assert not m.expired() and m.remaining_nodes() == 10
+    m.charge(10)
+    assert m.expired() and m.remaining_nodes() == 0
+    cap.value = -1  # the "no budget active" sentinel
+    assert not m.expired() and m.remaining_nodes() is None
+
+
+# --------------------------------------------------------------------------
+# off-path identity: budget machinery changes nothing until it fires
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,ein,arch", CASES, ids=[c[0] for c in CASES])
+def test_no_budget_bit_identical_serial(name, ein, arch):
+    best_ref, st_ref = tcm_map(ein, arch)
+    best_b, st_b = tcm_map(ein, arch, budget=GENEROUS)
+    assert best_b.mapping == best_ref.mapping
+    assert (best_b.energy, best_b.latency, best_b.edp) == (
+        best_ref.energy, best_ref.latency, best_ref.edp)
+    assert _stats_sig(st_b) == _stats_sig(st_ref)
+    assert not st_b.truncated and st_b.gap_bound == 1.0
+
+
+@pytest.mark.parametrize("name,ein,arch", CASES, ids=[c[0] for c in CASES])
+def test_no_budget_bit_identical_pooled(name, ein, arch):
+    """The unshared search (exact-stats contract) stays bit-identical
+    across backends with a live-but-idle meter installed in the workers."""
+    best_s, st_s = tcm_map(ein, arch, share_incumbents=False)
+    best_p, st_p = tcm_map(ein, arch, workers=2, share_incumbents=False,
+                           budget=GENEROUS)
+    assert best_p.mapping == best_s.mapping
+    assert (best_p.energy, best_p.latency, best_p.edp) == (
+        best_s.energy, best_s.latency, best_s.edp)
+    assert _stats_sig(st_p) == _stats_sig(st_s)
+    assert not st_p.truncated and st_p.gap_bound == 1.0
+
+
+# --------------------------------------------------------------------------
+# anytime validity + certificate soundness vs the brute-force oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("workers", [None, 2], ids=["serial", "pool"])
+@pytest.mark.parametrize("cap", [1, 5, 50])
+def test_node_cap_truncation_is_sound(workers, cap):
+    name, ein, arch = CASES[0]
+    oracle = brute_force_optimum(ein, arch, keep_unit_loops=False)
+    assert oracle is not None
+    best, stats = tcm_map(ein, arch, workers=workers,
+                          budget=SearchBudget(max_expanded=cap))
+    assert stats.truncated
+    assert stats.n_truncated_units > 0
+    # the anytime value is a real evaluated mapping: structurally valid
+    # and never better than the true optimum
+    if best is not None:
+        validate_structure(ein, arch, best.mapping)
+        assert best.edp >= oracle.result.edp * (1 - RTOL)
+        # certificate: optimum >= best / gap_bound (when certifiable)
+        if stats.gap_bound != float("inf"):
+            assert stats.gap_bound >= 1.0
+            assert oracle.result.edp >= (
+                best.edp / stats.gap_bound) * (1 - RTOL)
+    else:
+        # nothing returned => nothing certifiable
+        assert stats.gap_bound == float("inf")
+
+
+def test_expired_deadline_truncates_every_unit():
+    name, ein, arch = CASES[0]
+    best, stats = tcm_map(ein, arch,
+                          budget=SearchBudget(deadline_s=0.0))
+    assert stats.truncated
+    assert stats.n_truncated_units > 0
+    if best is not None:
+        validate_structure(ein, arch, best.mapping)
+
+
+def test_untruncated_budget_run_is_exact():
+    """A cap the search never reaches: result must be exact (gap 1.0) and
+    equal to the unbudgeted optimum."""
+    name, ein, arch = CASES[0]
+    ref, _ = tcm_map(ein, arch)
+    best, stats = tcm_map(ein, arch, budget=GENEROUS)
+    assert not stats.truncated and stats.gap_bound == 1.0
+    assert best.edp == ref.edp
+
+
+def test_one_meter_spans_many_searches():
+    """netmap threads one meter across every layer: the second search draws
+    down what the first consumed and truncates when the pool is empty."""
+    name, ein, arch = CASES[0]
+    _, st_ref = tcm_map(ein, arch)
+    cap = st_ref.n_expanded + 10  # enough for one full search, not two
+    meter = SearchBudget(max_expanded=cap).start()
+    _, st1 = tcm_map(ein, arch, budget=meter)
+    assert not st1.truncated
+    assert meter.used >= st_ref.n_expanded
+    _, st2 = tcm_map(ein, arch, budget=meter)
+    assert st2.truncated  # the shared pool was (nearly) exhausted
+    assert st1.gap_bound == 1.0 and st2.gap_bound >= 1.0
+
+
+def test_truncated_stats_merge():
+    from repro.core.search import MapperStats
+
+    a = MapperStats()
+    b = MapperStats(truncated=True, gap_bound=1.5, n_truncated_units=2,
+                    n_retried_units=1, n_quarantined_units=1,
+                    n_resumed_units=3)
+    a.merge(b)
+    assert a.truncated and a.gap_bound == 1.5
+    assert a.n_truncated_units == 2 and a.n_retried_units == 1
+    assert a.n_quarantined_units == 1 and a.n_resumed_units == 3
+    # gap bounds combine by max (worst certified gap wins)
+    a.merge(MapperStats(truncated=True, gap_bound=1.2))
+    assert a.gap_bound == 1.5
+
+
+def test_budget_spec_is_reusable():
+    """A SearchBudget is a spec: each start() opens an independent clock."""
+    spec = SearchBudget(max_expanded=7)
+    m1, m2 = spec.start(), spec.start()
+    m1.charge(7)
+    assert m1.expired() and not m2.expired()

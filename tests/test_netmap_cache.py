@@ -110,6 +110,54 @@ def test_structurally_malformed_entry_degrades_to_miss(tmp_path, searched):
     assert poisoned.n_corrupt == 1 and poisoned.misses == 1
 
 
+def test_torn_append_quarantined_and_compacted(tmp_path, searched):
+    """A crash mid-append leaves a torn trailing line: the loader moves it
+    to the .quarantine side file, counts it, and compacts the store so the
+    next load is clean."""
+    from repro.testing.faults import tear_last_line
+
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+    other = matmul("other", 4, 8, 2)
+    best2, stats2 = tcm_map(other, ARCH, objective="edp")
+    cache.put(other, ARCH, "edp", best2, stats2)
+
+    tear_last_line(cache.path)
+    reloaded = MappingCache(root=tmp_path)
+    assert reloaded.n_quarantined == 1
+    assert len(reloaded) == 1
+    assert reloaded.get(EINSUM, ARCH, "edp").result == best  # survivor
+    assert reloaded.get(other, ARCH, "edp") is None  # torn entry -> miss
+    # the damage is preserved for post-mortems, not silently dropped
+    assert reloaded.quarantine_path.exists()
+    assert reloaded.quarantine_path.read_text().strip()
+    # compaction rewrote the store: a further load sees a clean file
+    clean = MappingCache(root=tmp_path)
+    assert clean.n_quarantined == 0 and clean.n_corrupt == 0
+    assert len(clean) == 1
+    # and the store is usable for new appends after recovery
+    clean.put(other, ARCH, "edp", best2, stats2)
+    assert MappingCache(root=tmp_path).get(other, ARCH, "edp") is not None
+
+
+def test_quarantine_accumulates_across_loads(tmp_path, searched):
+    best, stats = searched
+    cache = MappingCache(root=tmp_path)
+    cache.put(EINSUM, ARCH, "edp", best, stats)
+    with open(cache.path, "a", encoding="utf-8") as f:
+        f.write('{"v": 1, "key": "cut off mi')
+    MappingCache(root=tmp_path)  # quarantines + compacts
+    with open(cache.path, "a", encoding="utf-8") as f:
+        f.write("not json either\n")
+    again = MappingCache(root=tmp_path)
+    assert again.n_quarantined == 1
+    # the side file holds both casualties
+    lines = [ln for ln in again.quarantine_path.read_text().splitlines()
+             if ln.strip()]
+    assert len(lines) == 2
+
+
 def test_clear(tmp_path, searched):
     best, stats = searched
     cache = MappingCache(root=tmp_path)
