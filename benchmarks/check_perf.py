@@ -13,7 +13,14 @@ Compares the perf-smoke record against the committed reference
     that is the regression wall-time noise cannot excuse), or
   * the traced QK run (live ``repro.obs.Tracer``) exceeds
     ``max_trace_overhead_ratio`` of the untraced wall time, or its
-    deterministic serial event count drifts from ``qk_trace_events``.
+    deterministic serial event count drifts from ``qk_trace_events``, or
+  * the fused QK->AV row regresses: wall time past the 2x gate, the packed
+    chain-kernel microbenchmark (``fused_kernel_eval_s``) past the same
+    gate, or ``fused_qkav_n_expanded`` / ``fused_qkav_edp`` off their
+    *exact* bit-identity anchors (serial fused exploration is
+    deterministic; the fast-path parity contract allows zero drift), or
+  * the ``max_group=4`` netmap smoke (4-member cascade through the default
+    partition) regresses in wall time or exploration count.
 
 The committed reference time is deliberately generous (several times a warm
 dev-container run) so the 2x gate trips on algorithmic regressions, not on
@@ -84,7 +91,10 @@ def main(argv) -> int:
                 f"{perf['qk_search_s']}s unbudgeted) — the anytime-search "
                 f"machinery is no longer off-path")
 
-    # fused QK->AV joint search (same two gates, when the record has it)
+    # fused QK->AV joint search: wall time gates as usual, but n_expanded
+    # and the optimum EDP are *bit-identity anchors* — serial fused
+    # exploration is deterministic and the fast-path parity contract
+    # requires exact equality, so any drift (either direction) fails
     flimit_s = flimit_n = None
     if "fused_qkav_s" in ref and "fused_qkav_s" in perf:
         flimit_s = ref["fused_qkav_s"] * ref["max_time_regression"]
@@ -93,13 +103,44 @@ def main(argv) -> int:
                 f"fused QK+AV search took {perf['fused_qkav_s']}s > "
                 f"{flimit_s}s (reference {ref['fused_qkav_s']}s x "
                 f"{ref['max_time_regression']})")
-        flimit_n = (ref["fused_qkav_n_expanded"]
-                    * ref["max_n_expanded_regression"])
-        if perf["fused_qkav_n_expanded"] > flimit_n:
+        flimit_n = ref["fused_qkav_n_expanded"]
+        if perf["fused_qkav_n_expanded"] != flimit_n:
             failures.append(
-                f"fused QK+AV n_expanded {perf['fused_qkav_n_expanded']} > "
-                f"{flimit_n:.0f} (reference "
-                f"{ref['fused_qkav_n_expanded']}) — prune power lost")
+                f"fused QK+AV n_expanded {perf['fused_qkav_n_expanded']} != "
+                f"{flimit_n} (bit-identity anchor; serial fused exploration "
+                f"is deterministic — the fast path changed search behaviour)")
+        if "fused_qkav_edp" in ref and \
+                perf.get("fused_qkav_edp") != ref["fused_qkav_edp"]:
+            failures.append(
+                f"fused QK+AV optimum EDP {perf.get('fused_qkav_edp')!r} != "
+                f"{ref['fused_qkav_edp']!r} (bit-identity anchor)")
+        if "fused_kernel_eval_s" in ref and "fused_kernel_eval_s" in perf:
+            klimit = ref["fused_kernel_eval_s"] * ref["max_time_regression"]
+            if perf["fused_kernel_eval_s"] > klimit:
+                failures.append(
+                    f"fused chain-kernel eval took "
+                    f"{perf['fused_kernel_eval_s']}s > {klimit}s (reference "
+                    f"{ref['fused_kernel_eval_s']}s x "
+                    f"{ref['max_time_regression']}) — packed kernel "
+                    f"evaluation is no longer compiled")
+
+    # max_group=4 netmap smoke (4-member cascade through the default
+    # partition; n_expanded deterministic on the serial backend)
+    nm4_s = nm4_n = None
+    if "netmap4_smoke_s" in ref and "netmap4_smoke_s" in perf:
+        nm4_s = ref["netmap4_smoke_s"] * ref["max_time_regression"]
+        if perf["netmap4_smoke_s"] > nm4_s:
+            failures.append(
+                f"max_group=4 netmap smoke took {perf['netmap4_smoke_s']}s "
+                f"> {nm4_s}s (reference {ref['netmap4_smoke_s']}s x "
+                f"{ref['max_time_regression']})")
+        nm4_n = (ref["netmap4_n_expanded"]
+                 * ref["max_n_expanded_regression"])
+        if perf["netmap4_n_expanded"] > nm4_n:
+            failures.append(
+                f"max_group=4 netmap smoke n_expanded "
+                f"{perf['netmap4_n_expanded']} > {nm4_n:.0f} (reference "
+                f"{ref['netmap4_n_expanded']}) — prune power lost")
 
     # DSE sweep (fig9 fast row): wall time + deterministic serial node
     # count + pruned-point floor (losing outer-loop prune power is the
@@ -141,7 +182,13 @@ def main(argv) -> int:
         if flimit_s is not None:
             msg += (f"; fused QK+AV {perf['fused_qkav_s']}s "
                     f"(limit {flimit_s}s), n_expanded "
-                    f"{perf['fused_qkav_n_expanded']} (limit {flimit_n:.0f})")
+                    f"{perf['fused_qkav_n_expanded']} (anchor {flimit_n}), "
+                    f"kernel eval {perf.get('fused_kernel_eval_s', '?')}s")
+        if nm4_s is not None:
+            msg += (f"; max_group=4 netmap smoke "
+                    f"{perf['netmap4_smoke_s']}s (limit {nm4_s}s), "
+                    f"n_expanded {perf['netmap4_n_expanded']} "
+                    f"(limit {nm4_n:.0f})")
         if dlimit_s is not None:
             msg += (f"; DSE sweep {perf['dse_sweep_s']}s "
                     f"(limit {dlimit_s}s), n_expanded "

@@ -136,6 +136,61 @@ def perf_smoke(trace_path=None) -> dict:
     assert fused.energy <= bq.energy + ba.energy
     assert fused.latency <= bq.latency + ba.latency
 
+    # fused chain-kernel microbenchmark: one compiled LB + dominance kernel
+    # evaluation over a packed 4096-row wave (the innermost unit of work of
+    # the fused fast path; min-of-5 insulates from scheduler noise)
+    import numpy as np
+
+    from repro.core.fusion import enumerate_fused_skeletons
+    from repro.core.search import cached_curried_model
+    from repro.core.tileshape import stepper_for
+
+    fcm = cached_curried_model(group, tpu,
+                               enumerate_fused_skeletons(group, tpu)[0])
+    fst = stepper_for(fcm, "edp")
+    mid = frozenset(fst.sites[k].sym
+                    for k in fst.explore_order[:len(fst.explore_order) // 2])
+    lb_kernel, _ = fst.lb_kernels(mid)
+    dom_kernel = fst.dominance_kernel(mid)
+    rng = np.random.default_rng(0)
+    ext = rng.integers(
+        1, 17, size=(4096, len(fst.sites) + len(fst.chain_shapes))
+    ).astype(np.float64)
+    cols = ext[:, :len(fst.sites)].copy()
+    kernel_walls = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        lb_kernel(ext)
+        dom_kernel(cols)
+        kernel_walls.append(time.perf_counter() - t0)
+    fused_kernel_s = min(kernel_walls)
+
+    # max_group=4 netmap smoke: the default partition must admit a
+    # 4-member linear cascade as one fusion group, and its (seeded) joint
+    # search must finish and validate — the workload class the max_group
+    # 3 -> 4 default bump newly reaches
+    from repro.core.einsum import EinsumGraph, TensorEdge
+    from repro.core.fusion import from_group
+
+    chain = [batched_matmul(f"nm{i}", 2, 2, 8, 8) for i in range(4)]
+    graph = EinsumGraph(
+        chain, [TensorEdge(f"nm{i}", f"nm{i + 1}", "Z", "A")
+                for i in range(3)])
+    nvdla = nvdla_like(tensors=("A", "B", "Z"))
+    groups4 = graph.partition_fusion_groups(nvdla)
+    assert max(len(g.members) for g in groups4) == 4, \
+        "default max_group no longer admits a 4-member cascade"
+    wl4 = from_group(graph, next(g for g in groups4 if len(g.members) == 4))
+    clear_caches()
+    t0 = time.perf_counter()
+    ind4 = [tcm_map(m, nvdla)[0] for m in chain]
+    fused4, f4_stats = tcm_map_group(
+        wl4, nvdla,
+        inc_obj=(sum(r.energy for r in ind4)
+                 * sum(r.latency for r in ind4)))
+    netmap4_s = time.perf_counter() - t0
+    assert fused4 is not None
+
     # DSE smoke sweep: edge-small space x smoke attention pair, serial
     # (deterministic n_expanded / pruned-point counters gate prune power;
     # wall time gates the outer loop the same way qk_search_s gates the
@@ -169,6 +224,9 @@ def perf_smoke(trace_path=None) -> dict:
         "fused_qkav_s": round(fused_s, 3),
         "fused_qkav_n_expanded": f_stats.n_expanded,
         "fused_qkav_edp": fused.edp,
+        "fused_kernel_eval_s": round(fused_kernel_s, 5),
+        "netmap4_smoke_s": round(netmap4_s, 3),
+        "netmap4_n_expanded": f4_stats.n_expanded,
         "dse_sweep_s": round(dse_s, 3),
         "dse_n_expanded": dse.n_expanded,
         "dse_points_pruned": dse.n_pruned_roofline + dse.n_pruned_bound,
@@ -185,7 +243,10 @@ def perf_smoke(trace_path=None) -> dict:
           f"{perf['qk_budget_overhead']}x), "
           f"P0 bound-propagation speedup {perf['p0_bnb_speedup']}x, "
           f"fused QK+AV {fused_s:.2f}s "
-          f"(n_expanded={f_stats.n_expanded}), "
+          f"(n_expanded={f_stats.n_expanded}, "
+          f"kernel eval {fused_kernel_s * 1e3:.1f}ms), "
+          f"netmap max_group=4 smoke {netmap4_s:.2f}s "
+          f"(n_expanded={f4_stats.n_expanded}), "
           f"DSE sweep {dse_s:.2f}s "
           f"({dse.n_evaluated} evaluated / {perf['dse_points_pruned']} "
           f"pruned points)",

@@ -286,7 +286,7 @@ class EinsumGraph:
     # -- partition ---------------------------------------------------------
 
     def partition_fusion_groups(self, arch=None,
-                                max_group: int = 3) -> List[FusionGroup]:
+                                max_group: int = 4) -> List[FusionGroup]:
         """Partition nodes into fusion groups along fusable edges.
 
         Greedy in execution order: an edge joins two groups when the merged

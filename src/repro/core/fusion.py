@@ -240,7 +240,16 @@ def enumerate_fused_skeletons(w: FusedWorkload, arch: Arch,
     mapping — the planner reports the fallback, nothing is silently capped).
     """
     roles = pinned_roles(w)
-    identity = [(_member_key(m), roles[i]) for i, m in enumerate(w.members)]
+    # tying two members is only sound when they are interchangeable under
+    # the co-tiling classes: shared loop sites divide every tied member's
+    # chains identically, so each rank var must land in the same class for
+    # all tied members (the member_prefix_vars row).  Parallel twins (FFN
+    # up/gate) satisfy this; sequential middle members of a cascade do
+    # not — their n/k chains shift one class per hop, and tying them
+    # produces mappings whose loop bounds underrun the rank shape.
+    pvars = member_prefix_vars(w)
+    identity = [(_member_key(m), roles[i], pvars[i])
+                for i, m in enumerate(w.members)]
     rep_of: Dict[tuple, int] = {}
     group_idx: List[int] = []  # member -> index into the tied choice vector
     for ident in identity:

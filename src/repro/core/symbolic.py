@@ -20,7 +20,9 @@ All expressions support:
 """
 from __future__ import annotations
 
+import bisect
 import math
+import os
 from dataclasses import dataclass
 from typing import Dict, Iterable, Mapping, Sequence, Tuple, Union
 
@@ -259,13 +261,26 @@ Criterion = Tuple[Tuple[float, Tuple[Tuple[str, int], ...]], ...]
 
 
 def grouped_criteria(polys: Sequence[Poly], known: frozenset) -> list[Criterion]:
-    """Partition each poly by unknown factor; return discriminating criteria."""
+    """Partition each poly by unknown factor; return discriminating criteria.
+
+    ``Mono.powers`` is already sorted with nonzero exponents, so the
+    known/unknown factorization of each monomial is a plain membership
+    filter — no ``Mono.split`` object churn.  This runs once per known-set
+    per explored model, which puts it on the stepper-construction hot path.
+    """
     out: Dict[Criterion, None] = {}
     for poly in polys:
         groups: Dict[Tuple[Tuple[str, int], ...], list] = {}
         for m in poly.monos:
-            kp, up = m.split(known)
-            groups.setdefault(up.powers, []).append((kp.coeff, kp.powers))
+            kp: list = []
+            up: list = []
+            for se in m.powers:
+                (kp if se[0] in known else up).append(se)
+            key = tuple(up)
+            g = groups.get(key)
+            if g is None:
+                groups[key] = g = []
+            g.append((m.coeff, tuple(kp)))
         for terms in groups.values():
             if all(not pw for _, pw in terms):
                 continue  # constant across candidates: drop
@@ -297,6 +312,29 @@ def eval_criteria(crits: Sequence[Criterion], index: Mapping[str, int],
     return out
 
 
+# Optional jit of the packed kernel evaluation (the innermost search step).
+# Off by default: the numpy path is the bit-identity reference, and jax's
+# compiled arithmetic makes no bit-for-bit ordering promise.  Enable with
+# TCM_JIT=1 (or set_jit(True)) for experimentation on jax-capable hosts;
+# kernels fall back to numpy silently when jax is unavailable.
+_JIT_ENABLED = os.environ.get("TCM_JIT", "0") not in ("", "0")
+
+
+def set_jit(enabled: bool) -> None:
+    """Toggle the experimental jax.jit kernel-evaluation path at runtime."""
+    global _JIT_ENABLED
+    _JIT_ENABLED = bool(enabled)
+
+
+def _jax_or_none():
+    try:
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        return jax
+    except Exception:
+        return None
+
+
 class CriteriaKernel:
     """Compile a criteria list into packed numpy form, evaluated per batch.
 
@@ -304,55 +342,184 @@ class CriteriaKernel:
     ``column ** exponent`` power at each occurrence of each term, every
     batch.  A kernel resolves the symbol indices once at build time and
     evaluates each distinct ``(column, exponent)`` *factor* exactly once per
-    batch (``**`` is by far the most expensive elementwise op here); terms
-    then multiply precomputed contiguous factor vectors.  Products and sums
-    run left-to-right in the same order as the interpreted loops, so kernel
-    results are bit-identical to ``eval_criteria`` — pruning decisions
-    compiled through a kernel cannot diverge from the reference path.
+    batch (``**`` is by far the most expensive elementwise op here).
+
+    Evaluation is fully packed, factor-major: the factor table is one
+    ``(n_factors+1, n)`` matrix whose last row is the constant 1, and every
+    term of every criterion is one row of a flat ``(n_terms_total, n)``
+    product matrix, initialized to ``coeff * first_factor`` in one shot.
+    Factor slot ``q`` then multiplies only the rows whose term actually has
+    a ``q``-th factor (an index array per slot — no padded multiplies, so a
+    single 14-symbol term does not inflate the work of every 2-symbol term
+    sharing its kernel).  Finally terms accumulate into their criteria in
+    groups of equal term count via a sequential middle-axis reduction.
+
+    Per scalar, products and sums still run left-to-right in the same order
+    as the interpreted loops, so kernel results are bit-identical to
+    ``eval_criteria`` — pruning decisions compiled through a kernel cannot
+    diverge from the reference path.
     """
 
-    __slots__ = ("n_crits", "_factors", "_terms_by_crit")
+    __slots__ = ("n_crits", "_factors", "_coeff_flat",
+                 "_fid0", "_slots", "_acc_groups", "_factor_groups",
+                 "_jit_call")
 
     def __init__(self, crits: Sequence[Criterion], index: Mapping[str, int]):
         self.n_crits = len(crits)
+        self._jit_call = None
         factor_id: Dict[Tuple[int, int], int] = {}
         factors: list = []  # (column, exponent)
-        terms_by_crit: list = []
-        for crit in crits:
-            terms = []
+        coeff_flat: list = []
+        term_fids: list = []  # per flat term: list of factor ids, in order
+        by_nterms: Dict[int, tuple] = {}  # nt -> ([crit_idx], [first_row])
+        row = 0
+        for j, crit in enumerate(crits):
+            grp = by_nterms.get(len(crit))
+            if grp is None:
+                grp = by_nterms[len(crit)] = ([], [])
+            grp[0].append(j)
+            grp[1].append(row)
             for coeff, powers in crit:
+                coeff_flat.append(coeff)
                 fids = []
                 for s, e in powers:
                     key = (index[s], e)
-                    fid = factor_id.setdefault(key, len(factors))
-                    if fid == len(factors):
+                    fid = factor_id.get(key)
+                    if fid is None:
+                        fid = factor_id[key] = len(factors)
                         factors.append(key)
                     fids.append(fid)
-                terms.append((coeff, tuple(fids)))
-            terms_by_crit.append(tuple(terms))
+                term_fids.append(fids)
+                row += 1
         self._factors = tuple(factors)
-        self._terms_by_crit = tuple(terms_by_crit)
+        ident = len(factors)  # constant terms read the 1.0 row
+
+        # flat term rows sorted (stably) by factor count, so factor slot q
+        # applies to a contiguous tail of the product matrix — a slice
+        # in-place multiply instead of a gather/scatter per slot.  Typical
+        # inputs are tiny (tens of terms), so the packing below runs as
+        # plain Python loops: per-call numpy setup overhead would dominate
+        # the construction hot path otherwise.
+        n_rows = len(term_fids)
+        perm = sorted(range(n_rows), key=lambda r: len(term_fids[r]))
+        inv = [0] * n_rows
+        for pos, r in enumerate(perm):
+            inv[r] = pos
+        nfac_sorted = [len(term_fids[r]) for r in perm]
+        self._coeff_flat = np.array([coeff_flat[r] for r in perm])
+        max_nf = nfac_sorted[-1] if n_rows else 0
+        self._fid0 = np.array(
+            [term_fids[r][0] if term_fids[r] else ident for r in perm],
+            dtype=np.intp)
+        slots = []
+        for q in range(1, max_nf):
+            cut = bisect.bisect_left(nfac_sorted, q + 1)
+            slots.append((cut, np.array(
+                [term_fids[r][q] for r in perm[cut:]], dtype=np.intp)))
+        self._slots = tuple(slots)
+        # per equal-term-count group: (nt, criteria columns, (b, nt) matrix
+        # of sorted flat-row positions, term order preserved)
+        self._acc_groups = tuple(
+            (nt, np.array(js, dtype=np.intp),
+             np.array([[inv[f + t] for t in range(nt)] for f in fr],
+                      dtype=np.intp) if nt else None)
+            for nt, (js, fr) in sorted(by_nterms.items()))
+
+        # factor rows grouped by exponent: one gather (+ one scalar-exponent
+        # power, the same special-cased ufunc dispatch as ``col ** e``) fills
+        # every factor of that exponent at once
+        by_exp: Dict[int, list] = {}
+        for i, (ci, e) in enumerate(factors):
+            by_exp.setdefault(e, []).append((i, ci))
+        self._factor_groups = tuple(
+            (e, np.array([i for i, _ in rows], dtype=np.intp),
+             np.array([ci for _, ci in rows], dtype=np.intp))
+            for e, rows in by_exp.items())
+
+    def _factor_table(self, cols: np.ndarray) -> np.ndarray:
+        nf = len(self._factors)
+        F = np.empty((nf + 1, cols.shape[0]))
+        for e, rows, cis in self._factor_groups:
+            if e == 1:
+                F[rows] = cols.T[cis]
+            else:
+                F[rows] = cols.T[cis] ** e
+        F[nf] = 1.0
+        return F
 
     def __call__(self, cols: np.ndarray) -> np.ndarray:
         """cols: float array (n_candidates, n_syms) -> (n_candidates, n_crits)."""
         n = cols.shape[0]
-        out = np.empty((n, self.n_crits))
         if self.n_crits == 0:
-            return out
-        F = [cols[:, ci] if e == 1 else cols[:, ci] ** e
-             for ci, e in self._factors]
-        for j, terms in enumerate(self._terms_by_crit):
-            acc = np.zeros(n)
-            for coeff, fids in terms:
-                if fids:
-                    t = coeff * F[fids[0]]
-                    for fi in fids[1:]:
-                        t = t * F[fi]
-                else:
-                    t = np.full(n, coeff)
-                acc += t
-            out[:, j] = acc
-        return out
+            return np.empty((n, 0))
+        if _JIT_ENABLED:
+            res = self._call_jit(cols)
+            if res is not None:
+                return res
+        F = self._factor_table(cols)
+        # flat (n_terms_total, n) product matrix, rows sorted by factor
+        # count: slot q multiplies the tail of rows that still have a q-th
+        # factor, in the reference's left-to-right per-scalar product order
+        T = self._coeff_flat[:, None] * F[self._fid0]
+        for cut, fids in self._slots:
+            T[cut:] *= F[fids]
+        outT = np.empty((self.n_crits, n))
+        for nt, js, idx in self._acc_groups:
+            if nt == 0:
+                # empty criterion: the reference accumulator stays 0.0
+                outT[js] = 0.0
+                continue
+            # idx[:, t] locates term t of every criterion in the group;
+            # sequential += keeps the reference's left-to-right accumulation
+            # order per scalar (bit-identical; no term product is -0.0
+            # here: factors positive, real coefficients nonzero)
+            acc = T[idx[:, 0]]  # fancy indexing copies, safe to add into
+            for t in range(1, nt):
+                acc += T[idx[:, t]]
+            outT[js] = acc
+        return outT.T
+
+    def _call_jit(self, cols: np.ndarray):
+        """Experimental jax.jit path (TCM_JIT=1); None when jax is missing.
+
+        Not part of the bit-identity contract — useful only for measuring
+        what fused-search throughput looks like with a fused/jitted inner
+        step on accelerator-backed hosts.
+        """
+        if self._jit_call is None:
+            jax = _jax_or_none()
+            if jax is None:
+                self._jit_call = False
+            else:
+                jnp = jax.numpy
+                factors = self._factors
+                coeff_flat = self._coeff_flat
+                fid0 = self._fid0
+                slots = self._slots
+                acc_groups = self._acc_groups
+                n_crits = self.n_crits
+
+                def _eval(cols_j):
+                    n = cols_j.shape[0]
+                    rows = [cols_j[:, ci] if e == 1 else cols_j[:, ci] ** e
+                            for ci, e in factors]
+                    rows.append(jnp.ones(n, dtype=cols_j.dtype))
+                    F = jnp.stack(rows) if rows else jnp.ones((1, n))
+                    T = coeff_flat[:, None] * F[fid0]
+                    for cut, fids in slots:
+                        T = T.at[cut:].multiply(F[fids])
+                    out = jnp.zeros((n, n_crits), dtype=cols_j.dtype)
+                    for nt, js, idx in acc_groups:
+                        if nt == 0:
+                            continue
+                        G = T[idx]  # (b, nt, n)
+                        out = out.at[:, js].set(G.sum(axis=1).T)
+                    return out
+
+                self._jit_call = jax.jit(_eval)
+        if self._jit_call is False:
+            return None
+        return np.asarray(self._jit_call(cols))
 
 
 # ---------------------------------------------------------------------------

@@ -153,8 +153,44 @@ def _pareto_keep_exact(C: np.ndarray, block: int = 128) -> np.ndarray:
     return mask
 
 
-GROUP_BATCH_MAX = 192  # largest group handled by the batched pairwise path
+GROUP_BATCH_MAX = 512  # largest group handled by the batched pairwise path
 _PAIRWISE_BUDGET = 1 << 24  # bool elements per batched dominance tensor
+_PHASE1_CRITERIA = 6  # criteria scanned with full s*s broadcasts before compacting
+_SAMPLE_GROUPS = 64  # groups sampled to rank criteria by refutation power
+
+
+def _pack_key_cols(keys: np.ndarray) -> tuple:
+    """Mixed-radix fold of int64 key columns into as few columns as fit.
+
+    The fold is injective (per-column offsets and radices taken from the
+    data), so row equality — the only thing grouping needs — is preserved
+    exactly while ``lexsort`` runs over one or two keys instead of a dozen.
+    Returns a tuple of int64 arrays ordered for ``np.lexsort`` use.
+    """
+    n, ncols = keys.shape
+    if ncols == 0:
+        return (np.zeros(n, dtype=np.int64),)
+    if ncols == 1:
+        return (keys[:, 0],)
+    lo = keys.min(axis=0)
+    radix = keys.max(axis=0) - lo + 1
+    limit = np.iinfo(np.int64).max
+    packed = []
+    acc = None
+    cap = 1
+    for c in range(ncols):
+        v = keys[:, c] - lo[c]
+        r = int(radix[c])
+        if acc is None:
+            acc, cap = v, r
+        elif cap <= limit // r:
+            acc = acc * r + v
+            cap *= r
+        else:
+            packed.append(acc)
+            acc, cap = v, r
+    packed.append(acc)
+    return tuple(packed)
 
 
 def _grouped_pareto(C: np.ndarray, keys: np.ndarray) -> np.ndarray:
@@ -178,8 +214,18 @@ def _grouped_pareto(C: np.ndarray, keys: np.ndarray) -> np.ndarray:
     keep = np.ones(n, dtype=bool)
     if n <= 1:
         return keep
-    order = np.lexsort(keys.T)  # stable: ties preserve candidate order
-    sk = keys[order]
+    # Fold the reference scan's (criteria-sum, frontier-position) order into
+    # the grouping sort itself: primary keys group, the per-row criteria sum
+    # breaks ties within a group, and lexsort's stability resolves
+    # floating-point sum ties to frontier order.  Within each batched group
+    # the "earlier" relation is then exactly the triangular mask, so the
+    # pairwise pass needs no per-pair sum comparisons.  The sums are the
+    # same pairwise row reductions the reference computed (each row of C is
+    # a contiguous K-vector either way).
+    sums = C.sum(axis=1)
+    packed = _pack_key_cols(keys)
+    order = np.lexsort((sums,) + packed)
+    sk = np.column_stack([p[order] for p in packed])
     starts = np.flatnonzero(
         np.concatenate([[True], (sk[1:] != sk[:-1]).any(axis=1)]))
     sizes = np.diff(np.append(starts, n))
@@ -189,25 +235,108 @@ def _grouped_pareto(C: np.ndarray, keys: np.ndarray) -> np.ndarray:
         gs = starts[sizes == s]
         if s > GROUP_BATCH_MAX:
             for st0 in gs:
-                gi = order[st0:st0 + s]
+                # restore frontier order so _pareto_keep's tie handling
+                # (argmin representatives, stable sum argsort) sees the
+                # byte-identical input the per-group reference loop saw
+                gi = np.sort(order[st0:st0 + s])
                 keep[gi] = _pareto_keep(C[gi])
             continue
         idx = order[gs[:, None] + np.arange(s)[None, :]]  # (n_groups, s)
+        if s == 2:
+            # pair groups: one direct row-vs-row comparison, no 3-D tensor
+            le = (C[idx[:, 0]] <= C[idx[:, 1]]).all(axis=1)
+            keep[idx[le, 1]] = False
+            continue
         tri = np.triu(np.ones((s, s), dtype=bool), 1)  # [i, j]: i < j
-        chunk = max(1, _PAIRWISE_BUDGET // int(s * s * C.shape[1]))
+        K = C.shape[1]
+        K1 = min(K, _PHASE1_CRITERIA)
+        chunk = max(1, _PAIRWISE_BUDGET // int(s * s * K1))
         for c0 in range(0, idx.shape[0], chunk):
             ii = idx[c0:c0 + chunk]
-            X = C[ii]  # (g, s, K)
-            le = (X[:, :, None, :] <= X[:, None, :, :]).all(-1)  # i dom j
-            # the reference scan's order: ascending criteria sum, stable —
-            # i precedes j iff sum_i < sum_j, or the (floating-point) sums
-            # tie and i comes first in frontier order
-            sums = X.sum(axis=-1)
-            earlier = (sums[:, :, None] < sums[:, None, :]) \
-                | ((sums[:, :, None] == sums[:, None, :]) & tri[None])
-            dominated = (le & earlier).any(axis=1)
+            X = C[ii]  # (g, s, K) in (sum, frontier-position) order
+            if K1 < K:
+                # Pick the most refuting criteria (sampled on adjacent pairs
+                # of a handful of groups): the AND over all criteria is
+                # order-independent, so scanning discriminating columns first
+                # is bit-identical but kills most pairs in phase 1.
+                Xs = X[:_SAMPLE_GROUPS]
+                surv = (Xs[:, :-1, :] <= Xs[:, 1:, :]).sum(axis=(0, 1))
+                cols = np.argsort(surv, kind="stable")[:K1]
+            else:
+                cols = range(K)
+            # Phase 1: pairwise <=-mask over the strongest few criteria with
+            # full (g, s, s) broadcasts, seeded with the triangular mask so
+            # only i<j pairs survive.
+            le = np.repeat(tri[None], ii.shape[0], axis=0)
+            for kk in cols:
+                le &= X[:, :, None, kk] <= X[:, None, :, kk]
+            if K1 < K:
+                # Phase 2: compact to surviving (group, i, j) triples and
+                # finish with one flat row-vs-row pass (contiguous row
+                # gathers; re-checking the phase-1 columns is cheaper than
+                # slicing them out).
+                gi, pi, pj = np.nonzero(le)
+                dominated = np.zeros((ii.shape[0], s), dtype=bool)
+                if gi.size:
+                    m = (X[gi, pi] <= X[gi, pj]).all(axis=1)
+                    dominated[gi[m], pj[m]] = True
+            else:
+                dominated = le.any(axis=1)
             keep[ii] = ~dominated
     return keep
+
+
+def _merged_usage_kernel(entries, index):
+    """Compile all finite-capacity usage criteria into ONE kernel.
+
+    ``entries`` yields ``(criteria_list, cap)`` pairs; the merged kernel
+    evaluates every criterion in one packed pass and the returned caps
+    vector lines up column-for-column, so the per-candidate validity mask is
+    a single ``(U <= caps).all(axis=1)`` — boolean-identical to and-ing one
+    ``kernel(lower)[:, 0] <= cap`` mask per usage poly (each criterion's
+    value is computed by the same packed ops either way).
+    Returns ``(kernel, caps)`` or ``(None, None)`` when nothing is gated.
+    """
+    crits: List = []
+    caps: List[float] = []
+    for crit_list, cap in entries:
+        for crit in crit_list:
+            crits.append(crit)
+            caps.append(cap)
+    if not crits:
+        return None, None
+    return CriteriaKernel(crits, index), np.array(caps)
+
+
+def _expand_wave(k: int, divs: np.ndarray, chain_cols, fan_cols,
+                 cols, rem, fan_rem):
+    """Vectorized one-site frontier expansion shared by both steppers.
+
+    Evaluates the whole ``(divisor, candidate)`` wave at once: a packed
+    ``(n_divs, n_candidates)`` legality grid (every chain quotient of site
+    ``k`` divisible by ``d``, every fanout-capacity column >= ``d``),
+    flattened divisor-major so the emitted rows land in exactly the order
+    the historical per-divisor Python loop concatenated them — candidates
+    of the smallest divisor first, frontier order within each divisor.
+    Returns ``(cols, rem, fan_rem)`` or None when no candidate survives.
+    """
+    R = rem[:, chain_cols]  # (n, n_chains_of_site)
+    ok = (R[None, :, :] % divs[:, None, None] == 0).all(axis=2)
+    if fan_cols:
+        Fr = fan_rem[:, fan_cols]
+        ok &= (Fr[None, :, :] >= divs[:, None, None]).all(axis=2)
+    di, ci = np.nonzero(ok)  # C-order scan == divisor-major emission
+    if di.size == 0:
+        return None
+    d = divs[di]
+    c = cols[ci]
+    c[:, k] = d
+    r = rem[ci]
+    r[:, chain_cols] //= d[:, None]
+    f = fan_rem[ci]
+    if fan_cols:
+        f[:, fan_cols] //= d[:, None]
+    return c, r, f
 
 
 def _lb_terms(poly: Poly, known: frozenset,
@@ -242,6 +371,28 @@ def _lb_terms(poly: Poly, known: frozenset,
     return tuple(terms)
 
 
+def stepper_for(cm: CurriedModel, objective: str) -> "_Stepper":
+    """Memoized stepper for a (curried model, objective) pair.
+
+    The cache dict lives on the model instance (``cm.stepper_cache``) and is
+    keyed by objective only, so entries from different models can never
+    collide through the keying — but a *shared* cache dict (two models handed
+    the same dict, e.g. by aliasing bugs or deliberate reuse) would silently
+    serve one model's compiled stepper for the other.  Guard against that
+    here: a cached entry is only reused when it was built for this exact
+    model instance, and the implementation class is re-dispatched from
+    ``cm.is_fused`` on every build so a ``FusedCurriedModel`` can never
+    receive a plain ``_Stepper`` (or vice versa) regardless of which
+    ``.get`` alias the caller went through.
+    """
+    cache = cm.stepper_cache
+    st = cache.get(objective)
+    if st is None or st.cm is not cm:
+        impl = _FusedStepper if getattr(cm, "is_fused", False) else _Stepper
+        st = cache[objective] = impl(cm, objective)
+    return st
+
+
 class _Stepper:
     """Shared expansion machinery over the site exploration order.
 
@@ -253,18 +404,13 @@ class _Stepper:
     (``_dom_kernels`` / ``_lb_kernels``), instead of being re-derived and
     interpreted through Python loops at every step of every explore call.
     Steppers themselves are memoized per (curried model, objective) via
-    :meth:`get`, so a beam dive and a full explore share one compiled set.
+    :func:`stepper_for`, so a beam dive and a full explore share one
+    compiled set.
     """
 
     @classmethod
     def get(cls, cm: CurriedModel, objective: str) -> "_Stepper":
-        cache = cm.stepper_cache
-        st = cache.get(objective)
-        if st is None:
-            impl = _FusedStepper if getattr(cm, "is_fused", False) else \
-                _Stepper
-            st = cache[objective] = impl(cm, objective)
-        return st
+        return stepper_for(cm, objective)
 
     def __init__(self, cm: CurriedModel, objective: str):
         self.cm = cm
@@ -316,15 +462,14 @@ class _Stepper:
             for p, cap in zip(self.usage_polys, self.usage_caps)
             if cap != float("inf")
         ]
-        # compile-once layer: usage criteria are known-set independent
-        self.usage_kernels = [
-            (CriteriaKernel(crit, self.sym_index), cap)
-            for crit, cap in self.usage_crits if crit
-        ]
+        # compile-once layer: usage criteria are known-set independent, and
+        # all capacity checks merge into one packed kernel + caps vector
+        self.usage_kernel, self.usage_caps_vec = _merged_usage_kernel(
+            self.usage_crits, self.sym_index)
         # per-known-set compiled kernels, filled lazily along explore_order
         self._dom_kernels: Dict[frozenset, Optional[CriteriaKernel]] = {}
         self._lb_kernels: Dict[
-            frozenset, Tuple[CriteriaKernel, CriteriaKernel]] = {}
+            frozenset, Tuple[CriteriaKernel, Tuple[Tuple[int, int], ...]]] = {}
         # memoized beam-dive result (deterministic).  The two-phase engines
         # dive every unit in phase 1 before exploring it in phase 2; this
         # memo dedupes the two dives whenever both run in one process (the
@@ -337,33 +482,46 @@ class _Stepper:
             self._beam = _beam_incumbent(self)
         return self._beam
 
+    def dominance_criteria(self, known: frozenset) -> list:
+        """Uncompiled dominance criteria for one known-set — the per-node
+        reference that :meth:`dominance_kernel` lowers (parity-tested)."""
+        return grouped_criteria(
+            self.objective_polys + self.usage_polys, known)
+
     def dominance_kernel(self, known: frozenset) -> Optional[CriteriaKernel]:
         """Compiled dominance criteria for one known-set (None if empty)."""
         if known not in self._dom_kernels:
-            crits = grouped_criteria(
-                self.objective_polys + self.usage_polys, known)
+            crits = self.dominance_criteria(known)
             self._dom_kernels[known] = (
                 CriteriaKernel(crits, self.sym_index) if crits else None)
         return self._dom_kernels[known]
 
+    def lb_criteria(self, known: frozenset):
+        """Uncompiled lower-bound criteria + latency-arm-group slices — the
+        per-node reference that :meth:`lb_kernels` lowers (parity-tested)."""
+        unassigned_by_var: Dict[str, List[str]] = {
+            v: [] for v in self.vars_list}
+        for s in self.sites:
+            if s.sym not in known:
+                unassigned_by_var[s.var].append(s.sym)
+        e_crit = _lb_terms(self.cm.energy, known, self.var_of_sym,
+                           unassigned_by_var)
+        arm_crits = [
+            _lb_terms(a, known, self.var_of_sym, unassigned_by_var)
+            for a in self.latency_arms]
+        return [e_crit] + arm_crits, ((1, 1 + len(arm_crits)),)
+
     def lb_kernels(self, known: frozenset
-                   ) -> Tuple[CriteriaKernel, CriteriaKernel]:
-        """Compiled (energy, latency-arms) lower-bound kernels for one
-        known-set, over columns extended with the ``rem:`` pseudo-symbols."""
+                   ) -> Tuple[CriteriaKernel, Tuple[Tuple[int, int], ...]]:
+        """One compiled lower-bound kernel per known-set, over columns
+        extended with the ``rem:`` pseudo-symbols.  Column 0 is the energy
+        bound; the returned slices delimit each latency arm *group* (one
+        group here, one per member for the fused stepper), whose per-row
+        max contributes a latency term."""
         if known not in self._lb_kernels:
-            unassigned_by_var: Dict[str, List[str]] = {
-                v: [] for v in self.vars_list}
-            for s in self.sites:
-                if s.sym not in known:
-                    unassigned_by_var[s.var].append(s.sym)
-            e_crit = _lb_terms(self.cm.energy, known, self.var_of_sym,
-                               unassigned_by_var)
-            arm_crits = [
-                _lb_terms(a, known, self.var_of_sym, unassigned_by_var)
-                for a in self.latency_arms]
+            crits, slices = self.lb_criteria(known)
             self._lb_kernels[known] = (
-                CriteriaKernel([e_crit], self.ext_index),
-                CriteriaKernel(arm_crits, self.ext_index))
+                CriteriaKernel(crits, self.ext_index), slices)
         return self._lb_kernels[known]
 
     def init_state(self):
@@ -390,50 +548,33 @@ class _Stepper:
         if shape_v not in self.divisor_cache:
             self.divisor_cache[shape_v] = _divisors(shape_v)
         divs = self.divisor_cache[shape_v]
-        new_cols, new_rem, new_fan = [], [], []
-        for d in divs:
-            mask = rem[:, vi] % d == 0
-            if site.spatial:
-                mask &= fan_rem[:, self.fd_idx[(site.fanout, site.dim)]] >= d
-            if not mask.any():
-                continue
-            c = cols[mask].copy()
-            c[:, k] = d
-            r = rem[mask].copy()
-            r[:, vi] //= d
-            f = fan_rem[mask]
-            if site.spatial:
-                f = f.copy()
-                f[:, self.fd_idx[(site.fanout, site.dim)]] //= d
-            new_cols.append(c)
-            new_rem.append(r)
-            new_fan.append(f)
-        if not new_cols:
-            return None
-        return (np.concatenate(new_cols), np.concatenate(new_rem),
-                np.concatenate(new_fan))
+        fan_cols = ([self.fd_idx[(site.fanout, site.dim)]]
+                    if site.spatial else [])
+        return _expand_wave(k, divs, [vi], fan_cols, cols, rem, fan_rem)
 
     def usage_lower_ok(self, cols, assigned_set) -> np.ndarray:
-        """Monotone lower-bound validity mask."""
-        if not self.usage_kernels:
+        """Monotone lower-bound validity mask.
+
+        ``cols`` already *is* the usage lower bound: unassigned site columns
+        stay at their ``init_state`` value 1 (``expand`` only ever writes the
+        site being assigned), which is each bound's minimum.
+        """
+        if self.usage_kernel is None:
             return np.ones(cols.shape[0], dtype=bool)
-        lower = cols.astype(np.float64)
-        unassigned = [i for i in range(len(self.sites))
-                      if i not in assigned_set]
-        if unassigned:
-            lower[:, unassigned] = 1.0
-        ok = np.ones(cols.shape[0], dtype=bool)
-        for kernel, cap in self.usage_kernels:
-            ok &= kernel(lower)[:, 0] <= cap
-        return ok
+        U = self.usage_kernel(cols.astype(np.float64))
+        return (U <= self.usage_caps_vec).all(axis=1)
 
     def objective_lower_bound(self, cols, rem, known: frozenset) -> np.ndarray:
         """Sound lower bound of the objective for each partial candidate."""
         ext = np.concatenate(
             [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
-        e_kernel, arm_kernel = self.lb_kernels(known)
-        e_lb = e_kernel(ext)[:, 0]
-        l_lb = arm_kernel(ext).max(axis=1)
+        kernel, arm_slices = self.lb_kernels(known)
+        out = kernel(ext)
+        e_lb = out[:, 0]
+        l_lb = None
+        for a, b in arm_slices:
+            part = out[:, a:b].max(axis=1)
+            l_lb = part if l_lb is None else l_lb + part
         if self.objective == "edp":
             return e_lb * l_lb
         if self.objective == "energy":
@@ -468,7 +609,7 @@ class _FusedStepper:
 
     @classmethod
     def get(cls, cm, objective: str) -> "_FusedStepper":
-        return _Stepper.get(cm, objective)
+        return stepper_for(cm, objective)
 
     def __init__(self, cm, objective: str):
         self.cm = cm
@@ -544,17 +685,23 @@ class _FusedStepper:
             [a for arms in self.latency_arm_groups for a in arms]
             + [cm.energy])
         all_known = frozenset(self.sym_index)
-        self.usage_kernels = []
-        for cap, p in cm.usage_entries:
-            if cap == float("inf"):
-                continue
-            crit = grouped_criteria([p], all_known)
-            if crit:
-                self.usage_kernels.append(
-                    (CriteriaKernel(crit, self.sym_index), cap))
+        self.usage_kernel, self.usage_caps_vec = _merged_usage_kernel(
+            ((grouped_criteria([p], all_known), cap)
+             for cap, p in cm.usage_entries if cap != float("inf")),
+            self.sym_index)
         self._dom_kernels: Dict[frozenset, Optional[CriteriaKernel]] = {}
         self._lb_kernels: Dict[frozenset, tuple] = {}
         self._beam: object = _UNSET
+        # per-site packed expansion inputs (chain quotient columns and
+        # fanout-capacity columns consumed by each site)
+        self._site_fan_cols = [
+            [self.fd_idx[fd] for fd in self.site_fans[k]]
+            for k in range(n_sites)]
+        self._rem_sym = [f"rem:{ci}" for ci in range(n_chains)]
+        # per-poly lowering plans for _lb_terms_fused: symbol->chain routing
+        # is known-set independent, so resolve it once per poly (keyed by
+        # object identity; the polys are owned by ``cm`` for our lifetime)
+        self._lb_plans: Dict[int, tuple] = {}
 
         # live-column masks per step: a chain / fanout column whose sites are
         # all expanded can never change again, so keeping it in the
@@ -581,16 +728,18 @@ class _FusedStepper:
             self._beam = _beam_incumbent(self)
         return self._beam
 
-    def dominance_kernel(self, known: frozenset) -> Optional[CriteriaKernel]:
+    def dominance_criteria(self, known: frozenset) -> list:
         # usage polys whose symbols are all known are fixed: both compared
         # candidates already passed the exact capacity check, so the
         # constraint cannot discriminate futures — drop it from the criteria
         # (objective polys always stay: their known parts feed the objective)
+        live_usage = [p for p in self.usage_polys
+                      if not p.symbols() <= known]
+        return grouped_criteria(self.objective_polys + live_usage, known)
+
+    def dominance_kernel(self, known: frozenset) -> Optional[CriteriaKernel]:
         if known not in self._dom_kernels:
-            live_usage = [p for p in self.usage_polys
-                          if not p.symbols() <= known]
-            crits = grouped_criteria(
-                self.objective_polys + live_usage, known)
+            crits = self.dominance_criteria(known)
             self._dom_kernels[known] = (
                 CriteriaKernel(crits, self.sym_index) if crits else None)
         return self._dom_kernels[known]
@@ -618,64 +767,100 @@ class _FusedStepper:
         bound: ``rem_c^e`` for the exponents that hurt (negative under a
         positive coefficient, positive under a negative one).
         """
+        plan = self._lb_plans.get(id(poly))
+        if plan is None:
+            sym_chains = self.sym_chains
+            sym_index = self.sym_index
+            n_prefix = len(self.cm.classes)
+            plan = tuple(
+                (m.coeff,
+                 tuple((s, e, sym_chains[s][0], sym_index[s] < n_prefix)
+                       for s, e in m.powers))
+                for m in poly.monos)
+            self._lb_plans[id(poly)] = plan
         terms = []
-        for m in poly.monos:
+        rem_sym = self._rem_sym
+        for coeff, entries in plan:
             kp: Dict[str, int] = {}
             chain_exps: Dict[int, Dict[str, int]] = {}
-            for s, e in m.powers:
+            pos = coeff >= 0
+            for s, e, ci0, is_prefix in entries:
                 if s in known:
-                    kp[s] = kp.get(s, 0) + e
-                    continue
-                chains = self.sym_chains[s]
-                if self.sym_index[s] < len(self.cm.classes):
+                    # mono powers carry each symbol once, and site symbols
+                    # never collide with the "rem:<chain>" bound keys
+                    kp[s] = e
+                elif is_prefix:
                     # free prefix symbol: per-symbol relaxed bound against
                     # its first chain's quotient
-                    ci = chains[0]
-                    if (m.coeff >= 0 and e < 0) or (m.coeff < 0 and e > 0):
-                        key = f"rem:{ci}"
+                    if (e < 0) if pos else (e > 0):
+                        key = rem_sym[ci0]
                         kp[key] = kp.get(key, 0) + e
                 else:
-                    ci = chains[0]  # primary chain
-                    chain_exps.setdefault(ci, {})[s] = e
+                    ce = chain_exps.get(ci0)
+                    if ce is None:
+                        ce = chain_exps[ci0] = {}
+                    ce[s] = e
             for ci, exps in chain_exps.items():
                 if ci in relaxed:
-                    if m.coeff >= 0:
+                    if pos:
                         e_star = sum(e for e in exps.values() if e < 0)
                     else:
                         e_star = sum(e for e in exps.values() if e > 0)
                 else:
-                    es = [exps.get(s, 0) for s in unassigned_by_chain[ci]]
-                    e_star = min(es) if m.coeff >= 0 else max(es)
+                    # min/max over *all* unassigned symbols of the chain:
+                    # symbols absent from the mono contribute exponent 0
+                    vals = exps.values()
+                    if pos:
+                        e_star = min(vals)
+                        if e_star > 0 and len(exps) < len(
+                                unassigned_by_chain[ci]):
+                            e_star = 0
+                    else:
+                        e_star = max(vals)
+                        if e_star < 0 and len(exps) < len(
+                                unassigned_by_chain[ci]):
+                            e_star = 0
                 if e_star != 0:
-                    key = f"rem:{ci}"
+                    key = rem_sym[ci]
                     kp[key] = kp.get(key, 0) + e_star
-            terms.append((m.coeff, tuple(sorted(kp.items()))))
+            terms.append((coeff, tuple(sorted(kp.items()))))
         return tuple(terms)
 
+    def lb_criteria(self, known: frozenset):
+        """Uncompiled chain-aware LB criteria + member arm-group slices —
+        the per-node reference that :meth:`lb_kernels` lowers
+        (parity-tested)."""
+        unassigned_by_chain: Dict[int, List[str]] = {
+            ci: [] for ci in range(len(self.chain_shapes))}
+        relaxed = set()
+        for k, s in enumerate(self.sites):
+            if s.sym in known:
+                continue
+            if self.site_member[k] is None:
+                relaxed.update(self.site_chains[k])
+            else:
+                unassigned_by_chain[self.site_chains[k][0]].append(s.sym)
+        relaxed = frozenset(relaxed)
+        crits = [self._lb_terms_fused(self.cm.energy, known,
+                                      unassigned_by_chain, relaxed)]
+        slices = []
+        for arms in self.latency_arm_groups:
+            start = len(crits)
+            crits.extend(
+                self._lb_terms_fused(a, known, unassigned_by_chain,
+                                     relaxed) for a in arms)
+            slices.append((start, len(crits)))
+        return crits, tuple(slices)
+
     def lb_kernels(self, known: frozenset):
-        """Compiled (energy, per-member latency arms) LB kernels."""
+        """One compiled LB kernel per known-set: column 0 is the energy
+        bound, followed by every member's latency arms; the returned slices
+        delimit each member's arm group (their per-row maxima sum into the
+        joint latency bound)."""
         if known not in self._lb_kernels:
-            unassigned_by_chain: Dict[int, List[str]] = {
-                ci: [] for ci in range(len(self.chain_shapes))}
-            relaxed = set()
-            for k, s in enumerate(self.sites):
-                if s.sym in known:
-                    continue
-                if self.site_member[k] is None:
-                    relaxed.update(self.site_chains[k])
-                else:
-                    unassigned_by_chain[self.site_chains[k][0]].append(s.sym)
-            relaxed = frozenset(relaxed)
-            e_crit = self._lb_terms_fused(self.cm.energy, known,
-                                          unassigned_by_chain, relaxed)
-            arm_kernels = tuple(
-                CriteriaKernel(
-                    [self._lb_terms_fused(a, known, unassigned_by_chain,
-                                          relaxed) for a in arms],
-                    self.ext_index)
-                for arms in self.latency_arm_groups)
+            crits, slices = self.lb_criteria(known)
             self._lb_kernels[known] = (
-                CriteriaKernel([e_crit], self.ext_index), arm_kernels)
+                CriteriaKernel(crits, self.ext_index), slices)
         return self._lb_kernels[known]
 
     def init_state(self):
@@ -703,59 +888,31 @@ class _FusedStepper:
         if shape not in self.divisor_cache:
             self.divisor_cache[shape] = _divisors(shape)
         divs = self.divisor_cache[shape]
-        fan_cols = [self.fd_idx[(mi, fi, d)]
-                    for (mi, fi, d) in self.site_fans[k]]
-        new_cols, new_rem, new_fan = [], [], []
-        for d in divs:
-            mask = rem[:, chains[0]] % d == 0
-            for ci in chains[1:]:
-                mask &= rem[:, ci] % d == 0
-            for fc in fan_cols:
-                mask &= fan_rem[:, fc] >= d
-            if not mask.any():
-                continue
-            c = cols[mask].copy()
-            c[:, k] = d
-            r = rem[mask].copy()
-            for ci in chains:
-                r[:, ci] //= d
-            f = fan_rem[mask]
-            if fan_cols:
-                f = f.copy()
-                for fc in fan_cols:
-                    f[:, fc] //= d
-            new_cols.append(c)
-            new_rem.append(r)
-            new_fan.append(f)
-        if not new_cols:
-            return None
-        return (np.concatenate(new_cols), np.concatenate(new_rem),
-                np.concatenate(new_fan))
+        return _expand_wave(k, divs, list(chains), self._site_fan_cols[k],
+                            cols, rem, fan_rem)
 
     def usage_lower_ok(self, cols, assigned_set) -> np.ndarray:
-        """Monotone lower-bound validity mask (phase-local capacities)."""
-        if not self.usage_kernels:
+        """Monotone lower-bound validity mask (phase-local capacities).
+
+        As in :meth:`_Stepper.usage_lower_ok`, unassigned site columns are
+        already 1 — ``cols`` is the usage lower bound as-is.
+        """
+        if self.usage_kernel is None:
             return np.ones(cols.shape[0], dtype=bool)
-        lower = cols.astype(np.float64)
-        unassigned = [i for i in range(len(self.sites))
-                      if i not in assigned_set]
-        if unassigned:
-            lower[:, unassigned] = 1.0
-        ok = np.ones(cols.shape[0], dtype=bool)
-        for kernel, cap in self.usage_kernels:
-            ok &= kernel(lower)[:, 0] <= cap
-        return ok
+        U = self.usage_kernel(cols.astype(np.float64))
+        return (U <= self.usage_caps_vec).all(axis=1)
 
     def objective_lower_bound(self, cols, rem, known: frozenset) -> np.ndarray:
         """Sound joint lower bound: energy LB times the *sum* of per-member
         latency-arm maxima (members run sequentially)."""
         ext = np.concatenate(
             [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
-        e_kernel, arm_kernels = self.lb_kernels(known)
-        e_lb = e_kernel(ext)[:, 0]
+        kernel, arm_slices = self.lb_kernels(known)
+        out = kernel(ext)
+        e_lb = out[:, 0]
         l_lb = None
-        for kernel in arm_kernels:
-            part = kernel(ext).max(axis=1)
+        for a, b in arm_slices:
+            part = out[:, a:b].max(axis=1)
             l_lb = part if l_lb is None else l_lb + part
         if self.objective == "edp":
             return e_lb * l_lb

@@ -9,6 +9,10 @@
   # soundness fuzz: 200 cases vs the brute-force oracle, fixed seed
   PYTHONPATH=src python -m repro.gap --mode soundness --cases 200 --seed 0
 
+  # fused-group soundness fuzz: tiny 2-member cascades, exhaustively
+  # enumerated joint mapspace vs tcm_map_group
+  PYTHONPATH=src python -m repro.gap --mode soundness-fused --cases 50
+
   # replay a serialized violation repro
   PYTHONPATH=src python -m repro.gap --mode replay --repro gap_violation_0.json
 
@@ -33,7 +37,9 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.gap",
         description="Optimality-gap harness: metaheuristic baselines vs. "
         "TCM's exact optimum, wired as a pruning-soundness bug detector.")
-    ap.add_argument("--mode", choices=("gap", "soundness", "replay"),
+    ap.add_argument("--mode",
+                    choices=("gap", "soundness", "soundness-fused",
+                             "replay"),
                     default="gap")
     ap.add_argument("--workload", default="QK,P0",
                     help="comma-separated einsum names from the small suite "
@@ -115,18 +121,25 @@ def main() -> int:
             print("repro no longer violates (fixed?)")
         return 1 if violations else 0
 
-    if args.mode == "soundness":
+    if args.mode in ("soundness", "soundness-fused"):
+        fused = args.mode == "soundness-fused"
         time_budget = (args.time_budget if args.time_budget is not None
                        else args.deadline)
         journal = None
         if args.resume:
             import os
+            tag = "gap_fuzz_fused" if fused else "gap_fuzz"
             journal = os.path.join(
-                args.cache_dir, f"gap_fuzz_seed{args.seed}.jsonl")
-        report = snd.fuzz(args.cases, seed=args.seed,
-                          oracle=not args.no_oracle,
-                          time_budget_s=time_budget, verbose=True,
-                          journal_path=journal)
+                args.cache_dir, f"{tag}_seed{args.seed}.jsonl")
+        if fused:
+            report = snd.fuzz_fused(args.cases, seed=args.seed,
+                                    time_budget_s=time_budget, verbose=True,
+                                    journal_path=journal)
+        else:
+            report = snd.fuzz(args.cases, seed=args.seed,
+                              oracle=not args.no_oracle,
+                              time_budget_s=time_budget, verbose=True,
+                              journal_path=journal)
         resumed = (f", {report.n_resumed} resumed from journal"
                    if report.n_resumed else "")
         print(f"soundness fuzz: {report.n_cases} cases "

@@ -31,6 +31,7 @@ from ..core.baselines import evolutionary, simulated_annealing, timeloop_like
 from ..core.bruteforce import brute_force_optimum
 from ..core.einsum import (Einsum, TensorSpec, batched_matmul,
                            einsum_from_dict, einsum_to_dict, matmul)
+from ..core.fusion import FusedWorkload, GroupEdge
 from ..core.looptree import validate_structure
 from ..core.mapper import tcm_map
 from .runner import REL_EPS, derive_seed
@@ -362,8 +363,308 @@ def write_repro(violation: SoundnessViolation, path: str) -> None:
 
 
 def replay(path: str) -> Tuple[List[SoundnessViolation], int]:
-    """Re-run a serialized repro case (the minimized one when present)."""
+    """Re-run a serialized repro case (the minimized one when present).
+
+    Dispatches on the serialized ``kind``: fused-cascade repros re-run
+    through :func:`check_fused_case`, plain einsum repros through
+    :func:`check_case`.
+    """
     with open(path) as f:
         d = json.load(f)
-    case = FuzzCase.from_dict(d.get("minimized") or d["case"])
-    return check_case(case)
+    cd = d.get("minimized") or d["case"]
+    if cd.get("kind") == "fused":
+        return check_fused_case(FusedFuzzCase.from_dict(cd))
+    return check_case(FuzzCase.from_dict(cd))
+
+
+# ---------------------------------------------------------------------------
+# Fused-group brute-force oracle: tiny 2-member cascades, enumerated
+# exhaustively through the joint mapspace and compared against
+# ``tcm_map_group`` — the fused counterpart of the single-einsum oracle
+# above (closes the ROADMAP "fused-group soundness fuzzing" follow-up).
+# ---------------------------------------------------------------------------
+
+# joint-space guard: a draw whose unpruned fused wave outgrows this is
+# skipped (counted, not failed) — diversity comes from many tiny draws
+FUSED_WAVE_LIMIT = 200_000
+
+# tiny cascade shape pools: (H, M, K, N, N2) for Z0[h,m,n] = A@B feeding
+# Z1[h,m,n2] = Z0@C.  H/M = 1 drops the batch / shared-row class entirely,
+# exercising degenerate shared-class structure.
+_FUSED_DIMS = (1, 2, 4)
+
+
+@dataclass
+class FusedFuzzCase:
+    """One replayable fused fuzz draw.
+
+    The cascade is *parametric* — ``shapes = (H, M, K, N, N2)`` rebuilds
+    both chained batched matmuls — so greedy minimization can shrink the
+    shared contraction structure without ever breaking the producer ->
+    consumer shape chain (member 0's ``n`` is member 1's ``k``).
+    """
+
+    seed: int
+    shapes: Tuple[int, int, int, int, int]  # (H, M, K, N, N2)
+    arch: Arch
+    objective: str
+
+    def group(self) -> "FusedWorkload":
+        h, m, k, n, n2 = self.shapes
+        prod = batched_matmul("fz0", h, m, k, n)
+        cons = batched_matmul("fz1", h, m, n, n2)
+        return FusedWorkload("fz0+fz1", (prod, cons),
+                            (GroupEdge(0, 1, "Z", "A"),))
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": 1,
+            "kind": "fused",
+            "seed": self.seed,
+            "objective": self.objective,
+            "shapes": list(self.shapes),
+            "arch": arch_to_dict(self.arch),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FusedFuzzCase":
+        return cls(seed=int(d["seed"]),
+                   shapes=tuple(int(s) for s in d["shapes"]),
+                   arch=arch_from_dict(d["arch"]),
+                   objective=d["objective"])
+
+
+def random_fused_case(rng: random.Random,
+                      objective: Optional[str] = None) -> FusedFuzzCase:
+    """Draw one tiny cascade: random chained shapes, random 2-level arch.
+
+    The on-chip capacity draw varies which pin levels
+    ``enumerate_fused_skeletons`` admits (the intermediate ``H*M*N`` must
+    fit), so fuzz coverage sweeps pin placements as well as shapes.
+    """
+    seed = rng.randrange(2 ** 31)
+    r = random.Random(seed)
+    shapes = tuple(r.choice(_FUSED_DIMS) for _ in range(5))
+    dram_e = r.choice([50.0, 100.0, 200.0])
+    levels = [MemLevel("DRAM", float("inf"), dram_e, dram_e,
+                       r.choice([1e7, 1e8]))]
+    cap = r.choice([8, 16, 32, 64, 256])
+    glb_e = r.choice([0.5, 1.0, 2.0])
+    levels.append(MemLevel("GLB", cap, glb_e, glb_e, 1e9))
+    fanouts: Tuple[SpatialFanout, ...] = ()
+    if r.random() < 0.3:
+        fanouts = (SpatialFanout(above_level=1, dims=(2, 2)),)
+    arch = Arch("fz_fused", tuple(levels), fanouts=fanouts,
+                mac_energy=r.choice([0.3, 0.5]))
+    obj = objective if objective is not None else OBJECTIVES[r.randrange(3)]
+    return FusedFuzzCase(seed=seed, shapes=shapes, arch=arch, objective=obj)
+
+
+def _fused_exhaustive_optimum(case: FusedFuzzCase) -> float:
+    """Exhaustive minimum of ``case.objective`` over the *entire* joint
+    mapspace (every fused skeleton unit, every divisor assignment), using
+    the same ``FusedTileShapeModel`` cost the group search optimizes.
+
+    The unpruned frontier is expanded wave-by-wave with the fused
+    stepper's own ``expand`` (so the enumeration satisfies exactly the
+    divisibility/fanout structure of the search space) but *no* pruning of
+    any kind.  Raises :class:`FusedCaseTooBig` past ``FUSED_WAVE_LIMIT``.
+    """
+    from .gym import FusedMapspaceGym
+    gym = FusedMapspaceGym(case.group(), case.arch)
+    best = float("inf")
+    for u in range(len(gym.units)):
+        st = gym._stepper(u)
+        cols, rem, fan_rem = st.init_state()
+        dead = False
+        for k in st.explore_order:
+            out = st.expand(k, cols, rem, fan_rem)
+            if out is None:
+                dead = True
+                break
+            cols, rem, fan_rem = out
+            if cols.shape[0] > FUSED_WAVE_LIMIT:
+                raise FusedCaseTooBig(
+                    f"unit {u}: wave {cols.shape[0]} > {FUSED_WAVE_LIMIT}")
+        if dead:
+            continue
+        done = (rem == 1).all(axis=1)
+        if not done.any():
+            continue
+        e, l, valid = gym._model(u).tile_shape_model(cols[done])
+        if not valid.any():
+            continue
+        if case.objective == "edp":
+            obj = e * l
+        elif case.objective == "energy":
+            obj = e
+        else:
+            obj = l
+        best = min(best, float(obj[valid].min()))
+    return best
+
+
+class FusedCaseTooBig(Exception):
+    """Joint mapspace too large for exhaustive enumeration; skip the draw."""
+
+
+def check_fused_case(case: FusedFuzzCase
+                     ) -> Tuple[List[SoundnessViolation], int]:
+    """Cross-check ``tcm_map_group`` against the exhaustive joint optimum.
+
+    Two searches run per case: an *unseeded* one, whose optimum must equal
+    the exhaustive minimum exactly (both directions, ``REL_EPS``), and a
+    *production-style* one seeded with the independent-search incumbent
+    (``inc_obj``), which must return the same optimum whenever the fused
+    optimum beats the seed and ``None`` only when it doesn't — so unsound
+    incumbent cuts, chain lower bounds and dominance keys all indict
+    themselves.  Returns ``(violations, n_searches)``.
+    """
+    from ..core.mapper import tcm_map_group
+
+    violations: List[SoundnessViolation] = []
+    group = case.group()
+    obj_kind = case.objective
+    oracle = _fused_exhaustive_optimum(case)
+
+    def _obj(res) -> float:
+        return {"edp": res.energy * res.latency, "energy": res.energy,
+                "latency": res.latency}[obj_kind]
+
+    fused, _ = tcm_map_group(group, case.arch, objective=obj_kind)
+    opt = _obj(fused) if fused is not None else float("inf")
+    both_none = fused is None and oracle == float("inf")
+    if not both_none and not (
+            oracle * (1 - REL_EPS) <= opt <= oracle * (1 + REL_EPS)):
+        violations.append(SoundnessViolation(
+            "fused_oracle_mismatch",
+            f"tcm_map_group optimum {opt} != exhaustive {oracle}", case))
+
+    # production path: independent searches seed the incumbent
+    inc = float("inf")
+    b0, _ = tcm_map(group.members[0], case.arch, objective=obj_kind)
+    b1, _ = tcm_map(group.members[1], case.arch, objective=obj_kind)
+    if b0 is not None and b1 is not None:
+        e = b0.energy + b1.energy
+        l = b0.latency + b1.latency
+        inc = {"edp": e * l, "energy": e, "latency": l}[obj_kind]
+    seeded, _ = tcm_map_group(group, case.arch, objective=obj_kind,
+                              inc_obj=inc)
+    if seeded is not None:
+        s_obj = _obj(seeded)
+        if not (oracle * (1 - REL_EPS) <= s_obj <= oracle * (1 + REL_EPS)):
+            violations.append(SoundnessViolation(
+                "fused_oracle_mismatch",
+                f"seeded tcm_map_group optimum {s_obj} != exhaustive "
+                f"{oracle}", case))
+    elif oracle < inc * (1 - REL_EPS):
+        violations.append(SoundnessViolation(
+            "fused_incumbent_overprune",
+            f"seeded tcm_map_group found nothing below inc {inc} but the "
+            f"exhaustive optimum {oracle} beats it", case))
+    return violations, 4
+
+
+def _violates_fused(case: FusedFuzzCase) -> bool:
+    try:
+        vs, _ = check_fused_case(case)
+    except FusedCaseTooBig:
+        return False
+    return bool(vs)
+
+
+def minimize_fused_case(case: FusedFuzzCase,
+                        max_steps: int = 32) -> FusedFuzzCase:
+    """Greedy shrink of a violating cascade: halve one of the five shape
+    parameters (keeping the producer/consumer chain consistent by
+    construction) or the on-chip capacity while the violation reproduces."""
+    cur = case
+    for _ in range(max_steps):
+        shrunk = None
+        for i, dim in enumerate(cur.shapes):
+            if dim <= 1:
+                continue
+            shapes = list(cur.shapes)
+            shapes[i] = dim // 2
+            cand = FusedFuzzCase(cur.seed, tuple(shapes), cur.arch,
+                                 cur.objective)
+            if _violates_fused(cand):
+                shrunk = cand
+                break
+        if shrunk is None:
+            d = arch_to_dict(cur.arch)
+            cap = d["levels"][-1]["capacity"]
+            if isinstance(cap, (int, float)) and cap > 4:
+                d["levels"][-1]["capacity"] = int(cap) // 2
+                cand = FusedFuzzCase(cur.seed, cur.shapes,
+                                     arch_from_dict(d), cur.objective)
+                if _violates_fused(cand):
+                    shrunk = cand
+        if shrunk is None:
+            return cur
+        cur = shrunk
+    return cur
+
+
+def fuzz_fused(n_cases: int, seed: int = 0,
+               objectives: Sequence[str] = OBJECTIVES,
+               time_budget_s: Optional[float] = None,
+               minimize: bool = True,
+               verbose: bool = False,
+               journal_path: Optional[str] = None) -> FuzzReport:
+    """Fused-cascade fuzz campaign; same protocol/report as :func:`fuzz`
+    (round-robin objectives, resumable journal, greedy minimization), with
+    the exhaustive joint-mapspace optimum as the oracle.  Draws whose
+    unpruned joint space exceeds ``FUSED_WAVE_LIMIT`` are skipped without
+    counting as oracle-checked."""
+    import os
+    rng = random.Random(seed)
+    report = FuzzReport()
+    done = _load_fuzz_journal(journal_path, seed) if journal_path else {}
+    jf = None
+    if journal_path:
+        os.makedirs(os.path.dirname(journal_path) or ".", exist_ok=True)
+        jf = open(journal_path, "a", encoding="utf-8")
+    t0 = time.perf_counter()
+    try:
+        for i in range(n_cases):
+            if time_budget_s is not None and \
+                    time.perf_counter() - t0 > time_budget_s:
+                break
+            case = random_fused_case(
+                rng, objective=objectives[i % len(objectives)])
+            rec = done.get(i)
+            if rec is not None:
+                report.n_cases += 1
+                report.n_resumed += 1
+                report.n_oracle_checked += 1 if rec.get("oracle") else 0
+                report.n_baseline_runs += int(rec.get("n_runs", 0))
+                continue
+            try:
+                vs, n_runs = check_fused_case(case)
+                checked = True
+            except FusedCaseTooBig:
+                vs, n_runs = [], 0
+                checked = False
+            report.n_cases += 1
+            report.n_oracle_checked += 1 if checked else 0
+            report.n_baseline_runs += n_runs
+            for v in vs:
+                if minimize:
+                    v.minimized = minimize_fused_case(case)
+                report.violations.append(v)
+            if jf is not None:
+                jf.write(json.dumps({"seed": seed, "i": i, "ok": not vs,
+                                     "oracle": checked, "n_runs": n_runs},
+                                    separators=(",", ":")) + "\n")
+                jf.flush()
+                os.fsync(jf.fileno())
+            if verbose and (i + 1) % 25 == 0:
+                print(f"# fuzz-fused: {i + 1}/{n_cases} cases, "
+                      f"{len(report.violations)} violation(s), "
+                      f"{time.perf_counter() - t0:.1f}s", flush=True)
+    finally:
+        if jf is not None:
+            jf.close()
+    report.wall_s = time.perf_counter() - t0
+    return report

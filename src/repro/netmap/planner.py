@@ -285,7 +285,7 @@ def map_network(
     workers: Optional[int] = None,
     share_incumbents: bool = True,
     fuse: bool = True,
-    max_group: int = 3,
+    max_group: int = 4,
     verbose: bool = False,
     tracer=None,
     budget=None,

@@ -1,0 +1,277 @@
+"""Fused fast-path parity: compiled chain kernels vs per-node reference.
+
+The fused stepper's hot loop runs entirely on compiled
+:class:`~repro.core.symbolic.CriteriaKernel` objects (chain-aware lower
+bounds, arm-wise dominance criteria) and on the packed wave expansion of
+``_expand_wave``.  The contract is *bitwise*: the kernels must reproduce the
+interpreted ``eval_criteria`` reference exactly — not merely within
+tolerance — at every known-set along the exploration order, because the
+search's ``n_expanded`` / ``MapperStats`` anchors are pinned bit-for-bit in
+``benchmarks/perf_reference.json``.  The randomized (hypothesis) frontier
+property lives in ``test_fused_fastpath_property.py`` so this module still
+runs when the optional dependency is missing.
+"""
+import numpy as np
+import pytest
+
+from repro.core.einsum import batched_matmul, matmul
+from repro.core.fusion import (FusedWorkload, GroupEdge,
+                               enumerate_fused_skeletons)
+from repro.core.mapper import build_work_units
+from repro.core.presets import nvdla_like, tpu_v4i_like
+from repro.core.search import MapperStats, cached_curried_model
+from repro.core.symbolic import eval_criteria
+from repro.core.tileshape import (_expand_wave, _FusedStepper, _Stepper,
+                                  stepper_for)
+
+NVDLA = nvdla_like(tensors=("A", "B", "Z"))
+TPU = tpu_v4i_like()
+
+
+def _attention_pair():
+    qk = batched_matmul("qk", 8, 4, 32, 64)
+    av = batched_matmul("av", 8, 4, 64, 32)
+    return FusedWorkload("qk+av", (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+
+
+def _ffn_triple():
+    up = matmul("up", 4, 64, 128)
+    gate = matmul("gate", 4, 64, 128)
+    down = matmul("down", 4, 128, 64)
+    return FusedWorkload(
+        "up+gate+down", (up, gate, down),
+        (GroupEdge(0, 2, "Z", "A"), GroupEdge(1, 2, "Z", "A")))
+
+
+FIXTURES = {
+    "attention_pair": (_attention_pair, TPU),
+    "ffn_triple": (_ffn_triple, NVDLA),
+}
+
+
+def _fused_steppers(name, objective="edp", limit=3):
+    make, arch = FIXTURES[name]
+    wl = make()
+    for sk in enumerate_fused_skeletons(wl, arch)[:limit]:
+        st = stepper_for(cached_curried_model(wl, arch, sk), objective)
+        assert isinstance(st, _FusedStepper)
+        yield st
+
+
+def _knowns(st):
+    """Every distinct known-set the search can visit, in explore order."""
+    for step in range(len(st.explore_order) + 1):
+        yield frozenset(st.sites[k].sym for k in st.explore_order[:step])
+
+
+# --------------------------------------------------------------------------
+# chain-LB and dominance kernels: bitwise vs eval_criteria
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fused_lb_kernels_bitwise_vs_reference(name):
+    rng = np.random.default_rng(0)
+    checked = 0
+    for st in _fused_steppers(name):
+        n_ext = len(st.sites) + len(st.chain_shapes)
+        for known in _knowns(st):
+            kernel, slices = st.lb_kernels(known)
+            crits, ref_slices = st.lb_criteria(known)
+            assert slices == ref_slices
+            # one arm group per member, energy bound in column 0
+            assert len(slices) == len(st.latency_arm_groups)
+            assert slices[0][0] == 1
+            ext = rng.integers(1, 17, size=(29, n_ext)).astype(np.float64)
+            out = kernel(ext)
+            ref = eval_criteria(crits, st.ext_index, ext)
+            assert out.shape == ref.shape
+            assert np.array_equal(out, ref)
+            checked += 1
+    assert checked
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fused_dominance_kernels_bitwise_vs_reference(name):
+    rng = np.random.default_rng(1)
+    checked = 0
+    for st in _fused_steppers(name):
+        n_sites = len(st.sites)
+        for known in _knowns(st):
+            kernel = st.dominance_kernel(known)
+            crits = st.dominance_criteria(known)
+            assert (kernel is None) == (not crits)
+            if kernel is None:
+                continue
+            cols = rng.integers(1, 17, size=(23, n_sites)).astype(np.float64)
+            out = kernel(cols)
+            ref = eval_criteria(crits, st.sym_index, cols)
+            assert out.shape == ref.shape
+            assert np.array_equal(out, ref)
+            checked += 1
+    assert checked
+
+
+def test_fused_objective_lower_bound_matches_reference_assembly():
+    """The stepper's LB assembly (energy x sum of per-member arm maxima)
+    equals the same assembly over the interpreted criteria."""
+    rng = np.random.default_rng(2)
+    for st in _fused_steppers("attention_pair", limit=2):
+        cols, rem, fan_rem = st.init_state()
+        for step, k in enumerate(st.explore_order):
+            known = frozenset(
+                st.sites[q].sym for q in st.explore_order[:step])
+            out = st.expand(k, cols, rem, fan_rem)
+            if out is None:
+                break
+            cols, rem, fan_rem = out
+            if cols.shape[0] > 64:  # keep the walk bounded
+                sel = rng.permutation(cols.shape[0])[:64]
+                sel.sort()
+                cols, rem, fan_rem = cols[sel], rem[sel], fan_rem[sel]
+            nk = known | {st.sites[k].sym}
+            lb = st.objective_lower_bound(cols, rem, nk)
+            crits, slices = st.lb_criteria(nk)
+            ext = np.concatenate(
+                [cols.astype(np.float64), rem.astype(np.float64)], axis=1)
+            ref = eval_criteria(crits, st.ext_index, ext)
+            l_lb = sum(ref[:, a:b].max(axis=1) for a, b in slices)
+            assert np.array_equal(lb, ref[:, 0] * l_lb)
+
+
+# --------------------------------------------------------------------------
+# packed wave expansion vs the historical per-divisor loop
+# --------------------------------------------------------------------------
+
+
+def _expand_reference(k, divs, chain_cols, fan_cols, cols, rem, fan_rem):
+    """Per-divisor Python loop ``_expand_wave`` replaced (order-preserving:
+    smallest divisor first, frontier order within each divisor)."""
+    outs = []
+    for d in divs:
+        ok = np.ones(cols.shape[0], dtype=bool)
+        for ci in chain_cols:
+            ok &= rem[:, ci] % d == 0
+        for fc in fan_cols:
+            ok &= fan_rem[:, fc] >= d
+        idx = np.nonzero(ok)[0]
+        if not idx.size:
+            continue
+        c = cols[idx].copy()
+        c[:, k] = d
+        r = rem[idx].copy()
+        for ci in chain_cols:
+            r[:, ci] //= d
+        f = fan_rem[idx].copy()
+        for fc in fan_cols:
+            f[:, fc] //= d
+        outs.append((c, r, f))
+    if not outs:
+        return None
+    return tuple(np.concatenate(x) for x in zip(*outs))
+
+
+def test_expand_wave_matches_per_divisor_reference():
+    rng = np.random.default_rng(3)
+    divs = np.array([1, 2, 3, 4, 6, 8, 12, 24], dtype=np.int64)
+    for _ in range(50):
+        n = int(rng.integers(1, 40))
+        n_sites, n_chains, n_fans = 5, 4, 3
+        cols = rng.integers(1, 9, size=(n, n_sites)).astype(np.int64)
+        # quotients drawn from divisors of 24 so chains stay divisible
+        rem = divs[rng.integers(0, len(divs), size=(n, n_chains))]
+        fan_rem = rng.integers(1, 9, size=(n, n_fans)).astype(np.int64)
+        k = int(rng.integers(0, n_sites))
+        chain_cols = sorted(rng.permutation(n_chains)[
+            :int(rng.integers(1, n_chains + 1))].tolist())
+        fan_cols = sorted(rng.permutation(n_fans)[
+            :int(rng.integers(0, n_fans + 1))].tolist())
+        got = _expand_wave(k, divs, chain_cols, fan_cols,
+                           cols, rem, fan_rem)
+        ref = _expand_reference(k, divs, chain_cols, fan_cols,
+                                cols, rem, fan_rem)
+        if ref is None:
+            assert got is None
+            continue
+        for g, r in zip(got, ref):
+            assert np.array_equal(g, r)
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fused_stepper_expand_matches_reference_walk(name):
+    """Full-explore-order walk: ``st.expand`` (packed) and the per-divisor
+    reference produce identical frontiers at every step, absorbers
+    included."""
+    rng = np.random.default_rng(4)
+    for st in _fused_steppers(name, limit=2):
+        cols, rem, fan_rem = st.init_state()
+        for k in st.explore_order:
+            ab = st.absorber.get(k)
+            if ab:
+                ref_c = cols.copy()
+                ref_c[:, k] = rem[:, ab[0]]
+                ref_r = rem.copy()
+                ref_r[:, list(ab)] = 1
+                ref = (ref_c, ref_r, fan_rem)
+            else:
+                chains = st.site_chains[k]
+                shape = st.chain_shapes[chains[0]]
+                divs = np.array(
+                    [d for d in range(1, shape + 1) if shape % d == 0],
+                    dtype=np.int64)
+                ref = _expand_reference(
+                    k, divs, list(chains), st._site_fan_cols[k],
+                    cols, rem, fan_rem)
+            got = st.expand(k, cols, rem, fan_rem)
+            if ref is None:
+                assert got is None
+                break
+            for g, r in zip(got, ref):
+                assert np.array_equal(g, r)
+            cols, rem, fan_rem = got
+            if cols.shape[0] > 96:  # bound the walk, same rows both paths
+                sel = np.sort(rng.permutation(cols.shape[0])[:96])
+                cols, rem, fan_rem = cols[sel], rem[sel], fan_rem[sel]
+
+
+# --------------------------------------------------------------------------
+# shared stepper cache: fused and plain models can never collide
+# --------------------------------------------------------------------------
+
+
+def test_shared_stepper_cache_dispatches_per_model():
+    """Regression for ``_FusedStepper.get`` delegating into the shared
+    ``stepper_cache`` keying: a ``CurriedModel`` and a ``FusedCurriedModel``
+    pushed through one *aliased* cache dict must each still receive their
+    own implementation, keyed to their own model instance."""
+    wl = _attention_pair()
+    fused_cm = cached_curried_model(
+        wl, TPU, enumerate_fused_skeletons(wl, TPU)[0])
+    units = build_work_units(batched_matmul("qk", 8, 4, 32, 64), TPU,
+                             "edp", True, False, MapperStats())
+    plain_cm = cached_curried_model(
+        units[0].einsum, units[0].arch, units[0].skeleton)
+    assert getattr(fused_cm, "is_fused", False)
+    assert not getattr(plain_cm, "is_fused", False)
+
+    # deliberately alias one cache dict across both models
+    shared: dict = {}
+    fused_cm.stepper_cache = shared
+    plain_cm.stepper_cache = shared
+    try:
+        st_f = _FusedStepper.get(fused_cm, "edp")
+        st_p = _Stepper.get(plain_cm, "edp")
+        assert type(st_f) is _FusedStepper and st_f.cm is fused_cm
+        assert type(st_p) is _Stepper and st_p.cm is plain_cm
+        # the guard re-dispatches on every hand-off, both .get aliases
+        assert type(_Stepper.get(fused_cm, "edp")) is _FusedStepper
+        assert type(_FusedStepper.get(plain_cm, "edp")) is _Stepper
+        # per-model caches hit: same instance back for the same model
+        fused_cm.stepper_cache = {}
+        plain_cm.stepper_cache = {}
+        assert stepper_for(fused_cm, "edp") is stepper_for(fused_cm, "edp")
+        assert stepper_for(plain_cm, "edp") is stepper_for(plain_cm, "edp")
+    finally:
+        # cached_curried_model memoizes across tests: leave clean caches
+        fused_cm.stepper_cache = {}
+        plain_cm.stepper_cache = {}

@@ -1,0 +1,82 @@
+"""Randomized packed-vs-reference fused expansion property (hypothesis).
+
+Skips cleanly when ``hypothesis`` is not installed; the deterministic
+fused fast-path parity tests live in ``test_fused_fastpath.py`` and always
+run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: pip install hypothesis "
+           "(see requirements.txt)")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.einsum import batched_matmul  # noqa: E402
+from repro.core.fusion import (FusedWorkload, GroupEdge,  # noqa: E402
+                               enumerate_fused_skeletons)
+from repro.core.presets import tpu_v4i_like  # noqa: E402
+from repro.core.search import cached_curried_model  # noqa: E402
+from repro.core.tileshape import stepper_for  # noqa: E402
+
+from test_fused_fastpath import _expand_reference  # noqa: E402
+
+TPU = tpu_v4i_like()
+
+
+def _stepper(skeleton_idx):
+    qk = batched_matmul("pqk", 4, 2, 8, 16)
+    av = batched_matmul("pav", 4, 2, 16, 8)
+    wl = FusedWorkload("pqk+pav", (qk, av), (GroupEdge(0, 1, "Z", "A"),))
+    sks = enumerate_fused_skeletons(wl, TPU)
+    return stepper_for(
+        cached_curried_model(wl, TPU, sks[skeleton_idx % len(sks)]), "edp")
+
+
+def _reference_step(stp, k, cols, rem, fan_rem):
+    ab = stp.absorber.get(k)
+    if ab:
+        c = cols.copy()
+        c[:, k] = rem[:, ab[0]]
+        r = rem.copy()
+        r[:, list(ab)] = 1
+        return c, r, fan_rem
+    chains = stp.site_chains[k]
+    shape = stp.chain_shapes[chains[0]]
+    divs = np.array([d for d in range(1, shape + 1) if shape % d == 0],
+                    dtype=np.int64)
+    return _expand_reference(k, divs, list(chains), stp._site_fan_cols[k],
+                             cols, rem, fan_rem)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(skeleton_idx=st.integers(min_value=0, max_value=40),
+       seed=st.integers(min_value=0, max_value=2**32 - 1),
+       cap=st.integers(min_value=4, max_value=48))
+def test_packed_and_reference_expansion_identical_frontiers(
+        skeleton_idx, seed, cap):
+    """At every step of a randomly truncated walk through the explore
+    order, the packed ``st.expand`` emits exactly the frontier the
+    per-divisor reference loop would — same rows, same order, all three
+    arrays (tile columns, chain quotients, fanout capacities)."""
+    stp = _stepper(skeleton_idx)
+    rng = np.random.default_rng(seed)
+    cols, rem, fan_rem = stp.init_state()
+    for k in stp.explore_order:
+        got = stp.expand(k, cols, rem, fan_rem)
+        ref = _reference_step(stp, k, cols, rem, fan_rem)
+        if ref is None:
+            assert got is None
+            return
+        assert got is not None
+        for g, r in zip(got, ref):
+            assert g.dtype == r.dtype
+            assert np.array_equal(g, r)
+        cols, rem, fan_rem = got
+        if cols.shape[0] > cap:  # random truncation, same rows both paths
+            sel = np.sort(rng.permutation(cols.shape[0])[:cap])
+            cols, rem, fan_rem = cols[sel], rem[sel], fan_rem[sel]

@@ -147,6 +147,28 @@ def test_fused_triple_with_tied_members():
     assert best.energy < sum(r.energy for r in ind)
 
 
+def test_fused_four_member_cascade_middles_not_tied():
+    """Regression: a 4-member linear cascade has two structurally identical
+    *middle* members whose n/k chains sit in different co-tiling classes —
+    tying them (sharing skeleton loop sites) produced mappings whose loop
+    bounds underran the rank shape.  They must enumerate untied, and the
+    joint search must return a valid mapping (``tcm_map_group`` runs
+    ``validate_fused`` on the winner)."""
+    ms = [batched_matmul(f"c{i}", 2, 2, 8, 8) for i in range(4)]
+    w = FusedWorkload("c0+c1+c2+c3", tuple(ms),
+                      tuple(GroupEdge(i, i + 1, "Z", "A") for i in range(3)))
+    sks = enumerate_fused_skeletons(w, NVDLA)
+    assert sks
+    assert sks[0].members[1] is not sks[0].members[2]
+    best, _ = tcm_map_group(w, NVDLA)
+    assert best is not None
+    validate_fused(w, NVDLA, best.mapping)
+    ind = [tcm_map(m, NVDLA)[0] for m in w.members]
+    e = sum(r.energy for r in ind)
+    l = sum(r.latency for r in ind)
+    assert best.edp <= e * l
+
+
 def test_fused_serial_and_pool_value_identical():
     w = _attention_pair()
     serial, _ = tcm_map_group(w, NVDLA, engine=SerialEngine())

@@ -10,11 +10,13 @@ import random
 
 import pytest
 
+from repro.core.arch import Arch, MemLevel
 from repro.core.einsum import batched_matmul
 from repro.core.fusion import FusedWorkload, GroupEdge
 from repro.core.mapper import tcm_map, tcm_map_group
 from repro.core.presets import tpu_v4i_like
 from repro.gap import FusedMapspaceGym
+from repro.gap import soundness as snd
 
 REL_EPS = 1e-9
 
@@ -68,3 +70,77 @@ def test_fused_gym_counts_and_determinism(fused_setup):
     assert (ra.energy, ra.latency, ra.valid) == (rb.energy, rb.latency,
                                                  rb.valid)
     assert a.n_evals == 1
+
+
+# --------------------------------------------------------------------------
+# brute-force oracle cross-check (the fused soundness fuzzer)
+# --------------------------------------------------------------------------
+
+
+def _tiny_case(shapes=(2, 2, 2, 2, 2), cap=32, objective="edp"):
+    arch = Arch("fz_fused",
+                (MemLevel("DRAM", float("inf"), 100.0, 100.0, 1e8),
+                 MemLevel("GLB", cap, 1.0, 1.0, 1e9)),
+                mac_energy=0.5)
+    return snd.FusedFuzzCase(seed=7, shapes=shapes, arch=arch,
+                             objective=objective)
+
+
+@pytest.mark.parametrize("objective", ["edp", "energy", "latency"])
+def test_check_fused_case_tiny_cascade_clean(objective):
+    violations, n_searches = snd.check_fused_case(
+        _tiny_case(objective=objective))
+    assert violations == []
+    assert n_searches == 4
+
+
+def test_fused_exhaustive_oracle_matches_group_search():
+    case = _tiny_case(shapes=(2, 2, 4, 2, 4))
+    oracle = snd._fused_exhaustive_optimum(case)
+    fused, _ = tcm_map_group(case.group(), case.arch)
+    assert fused is not None and oracle < float("inf")
+    assert fused.edp == pytest.approx(oracle, rel=1e-9)
+
+
+def test_fuzz_fused_small_campaign_clean():
+    report = snd.fuzz_fused(8, seed=5, minimize=False)
+    assert report.ok, [v.detail for v in report.violations]
+    assert report.n_cases == 8
+    # skipped-too-big draws are not counted as oracle-checked
+    assert 0 < report.n_oracle_checked <= 8
+    assert report.n_baseline_runs == 4 * report.n_oracle_checked
+
+
+def test_fused_case_dict_roundtrip():
+    case = snd.random_fused_case(random.Random(11))
+    back = snd.FusedFuzzCase.from_dict(case.to_dict())
+    assert back.seed == case.seed
+    assert back.shapes == case.shapes
+    assert back.objective == case.objective
+    assert back.to_dict() == case.to_dict()
+
+
+def test_replay_dispatches_fused_repro(tmp_path):
+    """A serialized fused repro re-runs through ``check_fused_case`` (and a
+    sound case replays clean)."""
+    case = _tiny_case()
+    v = snd.SoundnessViolation("fused_oracle_mismatch", "synthetic", case)
+    path = tmp_path / "fused_repro.json"
+    snd.write_repro(v, str(path))
+    violations, n_searches = snd.replay(str(path))
+    assert violations == []
+    assert n_searches == 4
+
+
+def test_minimize_fused_case_shrinks_while_violating(monkeypatch):
+    """Greedy minimization walks shapes/capacity down while the (stubbed)
+    violation predicate holds, and never breaks the producer->consumer
+    chain (a single `shapes` vector rebuilds both members)."""
+    case = _tiny_case(shapes=(4, 4, 4, 4, 4), cap=64)
+    monkeypatch.setattr(
+        snd, "_violates_fused",
+        lambda c: all(s >= 2 for s in c.shapes))
+    small = snd.minimize_fused_case(case)
+    assert all(s >= 2 for s in small.shapes)
+    assert sum(small.shapes) < sum(case.shapes)
+    small.group()  # chained shapes still construct a legal cascade
