@@ -20,7 +20,11 @@ Compares the perf-smoke record against the committed reference
     *exact* bit-identity anchors (serial fused exploration is
     deterministic; the fast-path parity contract allows zero drift), or
   * the ``max_group=4`` netmap smoke (4-member cascade through the default
-    partition) regresses in wall time or exploration count.
+    partition) regresses in wall time or exploration count, or
+  * the online mapping service row (``repro.serve_map``) breaks an SLO:
+    warm-hit p99 above ``service_hit_p99_ms`` (absolute milliseconds), the
+    thundering-herd coalescing ratio below ``service_min_coalesce_ratio``,
+    or the deadline-met ratio below ``service_min_deadline_ratio``.
 
 The committed reference time is deliberately generous (several times a warm
 dev-container run) so the 2x gate trips on algorithmic regressions, not on
@@ -166,6 +170,32 @@ def main(argv) -> int:
                 f"arch points < {ref['dse_min_points_pruned']} — outer-loop "
                 f"pruning stopped working")
 
+    # online mapping service row (repro.serve_map): warm-hit tail latency
+    # is an absolute SLO (not a ratio — the hot path is dict lookups, so
+    # milliseconds of budget absorb runner variance), the coalescing and
+    # deadline-compliance ratios are floors
+    sp99 = None
+    if "service_hit_p99_ms" in ref and "service_hit_p99_ms" in perf:
+        sp99 = ref["service_hit_p99_ms"]
+        if perf["service_hit_p99_ms"] > sp99:
+            failures.append(
+                f"service warm-hit p99 {perf['service_hit_p99_ms']}ms > "
+                f"{sp99}ms — the hot path is no longer index-only")
+        if perf.get("service_coalesce_ratio", 0.0) < \
+                ref["service_min_coalesce_ratio"]:
+            failures.append(
+                f"service coalesce ratio "
+                f"{perf.get('service_coalesce_ratio', 0.0)} < "
+                f"{ref['service_min_coalesce_ratio']} — concurrent misses "
+                f"for one structural key are searching more than once")
+        if perf.get("service_deadline_met_ratio", 0.0) < \
+                ref["service_min_deadline_ratio"]:
+            failures.append(
+                f"service deadline-met ratio "
+                f"{perf.get('service_deadline_met_ratio', 0.0)} < "
+                f"{ref['service_min_deadline_ratio']} — bounded tail "
+                f"latency contract broken")
+
     for line in failures:
         print(f"PERF REGRESSION: {line}")
     if not failures:
@@ -194,6 +224,13 @@ def main(argv) -> int:
                     f"(limit {dlimit_s}s), n_expanded "
                     f"{perf['dse_n_expanded']} (limit {dlimit_n:.0f}), "
                     f"{perf.get('dse_points_pruned', 0)} points pruned")
+        if sp99 is not None:
+            msg += (f"; service hit p99 "
+                    f"{perf['service_hit_p99_ms']}ms (limit {sp99}ms), "
+                    f"coalesce {perf.get('service_coalesce_ratio')} "
+                    f"(floor {ref['service_min_coalesce_ratio']}), "
+                    f"deadlines {perf.get('service_deadline_met_ratio')} "
+                    f"(floor {ref['service_min_deadline_ratio']})")
         print(msg)
     return 1 if failures else 0
 

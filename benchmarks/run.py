@@ -56,8 +56,21 @@ def perf_smoke(trace_path=None) -> dict:
     from repro.core.mapper import tcm_map, tcm_map_group
     from repro.core.presets import (nvdla_like, small_matmul_suite,
                                     tpu_v4i_like)
-    from repro.core.search import clear_caches
+    from repro.core.search import clear_caches, make_engine
     from repro.obs import Tracer
+
+    # ONE shared serial engine threads through every search below instead
+    # of the default build-and-teardown per tcm_map call; the per-call
+    # setup cost that saves is measured here and recorded in the JSON
+    # (caller-provided engines stay open, so sharing is safe).  The
+    # unshared-incumbent row needs its own engine with the flag baked in.
+    t0 = time.perf_counter()
+    for _ in range(8):
+        make_engine().close()
+    engine_setup_s = (time.perf_counter() - t0) / 8
+    eng = make_engine()
+    eng_unshared = make_engine(share_incumbents=False)
+    n_engine_calls = 0  # searches that would each have built an engine
 
     suite = small_matmul_suite()
     qk_walls, qk_traced_walls, qk_budget_walls = [], [], []
@@ -65,13 +78,16 @@ def perf_smoke(trace_path=None) -> dict:
     for _ in range(3):
         clear_caches()
         t0 = time.perf_counter()
-        best, stats = tcm_map(suite["QK"], tpu_v4i_like())
+        best, stats = tcm_map(suite["QK"], tpu_v4i_like(), engine=eng)
+        n_engine_calls += 1
         qk_walls.append(time.perf_counter() - t0)
 
         tracer = Tracer()
         clear_caches()
         t0 = time.perf_counter()
-        best_t, stats_t = tcm_map(suite["QK"], tpu_v4i_like(), tracer=tracer)
+        best_t, stats_t = tcm_map(suite["QK"], tpu_v4i_like(), tracer=tracer,
+                                  engine=eng)
+        n_engine_calls += 1
         qk_traced_walls.append(time.perf_counter() - t0)
         assert (best_t.energy, best_t.latency, best_t.edp) == \
             (best.energy, best.latency, best.edp), \
@@ -85,8 +101,9 @@ def perf_smoke(trace_path=None) -> dict:
         clear_caches()
         t0 = time.perf_counter()
         best_b, stats_b = tcm_map(
-            suite["QK"], tpu_v4i_like(),
+            suite["QK"], tpu_v4i_like(), engine=eng,
             budget=SearchBudget(deadline_s=3600.0, max_expanded=10 ** 12))
+        n_engine_calls += 1
         qk_budget_walls.append(time.perf_counter() - t0)
         assert not stats_b.truncated and stats_b.gap_bound == 1.0, \
             "a never-expiring budget reported truncation"
@@ -108,11 +125,13 @@ def perf_smoke(trace_path=None) -> dict:
     arch = nvdla_like()
     clear_caches()
     t0 = time.perf_counter()
-    best_u, s_u = tcm_map(suite["P0"], arch, share_incumbents=False)
+    best_u, s_u = tcm_map(suite["P0"], arch, engine=eng_unshared)
+    n_engine_calls += 1
     p0_unshared_s = time.perf_counter() - t0
     clear_caches()
     t0 = time.perf_counter()
-    best_s, s_s = tcm_map(suite["P0"], arch)
+    best_s, s_s = tcm_map(suite["P0"], arch, engine=eng)
+    n_engine_calls += 1
     p0_shared_s = time.perf_counter() - t0
     assert (best_s.energy, best_s.latency, best_s.edp) == \
         (best_u.energy, best_u.latency, best_u.edp)
@@ -126,11 +145,12 @@ def perf_smoke(trace_path=None) -> dict:
     tpu = tpu_v4i_like()
     clear_caches()
     t0 = time.perf_counter()
-    bq, _ = tcm_map(fqk, tpu)
-    ba, _ = tcm_map(fav, tpu)
+    bq, _ = tcm_map(fqk, tpu, engine=eng)
+    ba, _ = tcm_map(fav, tpu, engine=eng)
     fused, f_stats = tcm_map_group(
-        group, tpu,
+        group, tpu, engine=eng,
         inc_obj=(bq.energy + ba.energy) * (bq.latency + ba.latency))
+    n_engine_calls += 3
     fused_s = time.perf_counter() - t0
     assert fused is not None
     assert fused.energy <= bq.energy + ba.energy
@@ -183,11 +203,12 @@ def perf_smoke(trace_path=None) -> dict:
     wl4 = from_group(graph, next(g for g in groups4 if len(g.members) == 4))
     clear_caches()
     t0 = time.perf_counter()
-    ind4 = [tcm_map(m, nvdla)[0] for m in chain]
+    ind4 = [tcm_map(m, nvdla, engine=eng)[0] for m in chain]
     fused4, f4_stats = tcm_map_group(
-        wl4, nvdla,
+        wl4, nvdla, engine=eng,
         inc_obj=(sum(r.energy for r in ind4)
                  * sum(r.latency for r in ind4)))
+    n_engine_calls += 5
     netmap4_s = time.perf_counter() - t0
     assert fused4 is not None
 
@@ -205,6 +226,29 @@ def perf_smoke(trace_path=None) -> dict:
                         collect_mappings=False)
     dse_s = time.perf_counter() - t0
     assert dse.frontier, "DSE smoke sweep returned an empty frontier"
+
+    eng.close()
+    eng_unshared.close()
+
+    # service_throughput row: the online mapping service (repro.serve_map)
+    # under mixed decode-shape traffic — warm-hit tail latency, deadline
+    # compliance, and the thundering-herd coalescing ratio all gate CI
+    # (check_perf.py); requests/s is an ungated trend key
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.serve_map import MappingService
+    from repro.serve_map.loadgen import run_loadgen
+
+    cfg = get_config("qwen1_5_0_5b", smoke=True)
+    t0 = time.perf_counter()
+    with MappingService(
+            cache_root=tempfile.mkdtemp(prefix="tcm-bench-")) as s_svc:
+        sreport = run_loadgen(s_svc, cfg, tpu_v4i_like(), requests=40,
+                              clients=4, seed=0, deadline_s=0.25,
+                              seq_range=(16, 256))
+        s_svc.drain_warm(timeout_s=60.0)
+    service_s = time.perf_counter() - t0
 
     perf = {
         "qk_search_s": round(qk_s, 3),
@@ -233,6 +277,18 @@ def perf_smoke(trace_path=None) -> dict:
         "dse_points_evaluated": dse.n_evaluated,
         "dse_frontier_size": len(dse.frontier),
         "dse_best_edp": dse.best.objective,
+        "engine_setup_s": round(engine_setup_s, 6),
+        "engine_setup_saved_s": round(engine_setup_s * n_engine_calls, 6),
+        "engine_calls_shared": n_engine_calls,
+        "service_bench_s": round(service_s, 3),
+        "service_hit_p50_ms": round(sreport["hit_p50_ms"], 3),
+        "service_hit_p99_ms": round(sreport["hit_p99_ms"], 3),
+        "service_rps": round(sreport["rps"], 1),
+        "service_coalesce_ratio": round(sreport["coalesce_ratio"], 3),
+        "service_deadline_met_ratio": round(
+            sreport["deadline_met_ratio"], 3),
+        "service_unique_buckets": sreport["unique_buckets"],
+        "service_unique_shapes": sreport["unique_shapes"],
     }
     print(f"# perf-smoke: QK search {qk_s:.2f}s "
           f"(n_expanded={stats.n_expanded}, "
@@ -249,7 +305,13 @@ def perf_smoke(trace_path=None) -> dict:
           f"(n_expanded={f4_stats.n_expanded}), "
           f"DSE sweep {dse_s:.2f}s "
           f"({dse.n_evaluated} evaluated / {perf['dse_points_pruned']} "
-          f"pruned points)",
+          f"pruned points), "
+          f"shared engine saved {perf['engine_setup_saved_s'] * 1e3:.1f}ms "
+          f"over {n_engine_calls} searches, "
+          f"service {service_s:.2f}s "
+          f"(hit p99 {perf['service_hit_p99_ms']:.2f}ms, "
+          f"{perf['service_rps']:.0f} req/s, "
+          f"coalesce {perf['service_coalesce_ratio']})",
           file=sys.stderr, flush=True)
     return perf
 

@@ -44,6 +44,7 @@ import functools
 import math
 import multiprocessing as mp
 import os
+import threading
 import time
 from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
                                 as_completed)
@@ -864,6 +865,15 @@ class ProcessPoolEngine(SearchEngine):
         self._executor: Optional[ProcessPoolExecutor] = None
         self._shared = None  # mp.Value('d'): the published global incumbent
         self._budget_values = None  # (deadline 'd', cap 'q', nodes 'q')
+        # One engine may be shared by many service threads.  A run owns the
+        # pool's shared incumbent/budget slots for its whole batch, so
+        # concurrent run() calls must serialize (they would otherwise
+        # re-arm each other's budget slots mid-batch); close() must be
+        # idempotent under concurrent callers (request threads and the
+        # service shutdown path can race).
+        self._run_lock = threading.Lock()
+        self._lifecycle_lock = threading.Lock()
+        self._closed = False
 
     def _get_executor(self) -> ProcessPoolExecutor:
         if self._executor is None:
@@ -1044,12 +1054,27 @@ class ProcessPoolEngine(SearchEngine):
     def run(self, units: Sequence[WorkUnit],
             inc_obj: float = float("inf"),
             tracer=None, budget=None) -> List[WorkResult]:
+        if self._closed:
+            raise RuntimeError(
+                "ProcessPoolEngine.run() called after close(); build a "
+                "fresh engine (make_engine) instead of reusing a closed one")
         tracer = active(tracer)
         meter = ensure_meter(budget)
         if self.workers <= 1 or len(units) <= 1:
             return SerialEngine(
                 self.share_incumbents, checkpoint=self.checkpoint,
             ).run(units, inc_obj, tracer=tracer, budget=meter)
+        # Serialize whole batches: the pool's shared incumbent and budget
+        # slots are per-batch state, so two interleaved run() calls would
+        # silently prune each other against the wrong incumbent/deadline.
+        with self._run_lock:
+            if self._closed:
+                raise RuntimeError(
+                    "ProcessPoolEngine closed while a run was queued")
+            return self._run_locked(units, inc_obj, tracer, meter)
+
+    def _run_locked(self, units: Sequence[WorkUnit], inc_obj: float,
+                    tracer, meter) -> List[WorkResult]:
         # Unit costs are heavily skewed (one skeleton can dominate the whole
         # search), so default to dynamic scheduling (chunksize 1); batching
         # only pays off once there are very many units per worker.
@@ -1188,11 +1213,20 @@ class ProcessPoolEngine(SearchEngine):
         self._budget_values = None
 
     def close(self) -> None:
-        if self._executor is not None:
-            self._executor.shutdown()
-        self._executor = None
-        self._shared = None
-        self._budget_values = None
+        """Idempotent and safe under concurrent callers: exactly one
+        caller shuts the executor down; the rest (and repeat calls) are
+        no-ops.  A run in flight finishes first — close() waits on the
+        run lock rather than yanking the pool out from under it."""
+        with self._lifecycle_lock:
+            if self._closed:
+                return
+            self._closed = True
+        with self._run_lock:
+            if self._executor is not None:
+                self._executor.shutdown()
+            self._executor = None
+            self._shared = None
+            self._budget_values = None
         clear_search_caches()
 
 

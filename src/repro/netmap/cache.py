@@ -28,12 +28,24 @@ Design points:
     for post-mortems, and the store is compacted in place (atomic temp +
     rename) so the damage never survives a reload.  Duplicate keys: last
     write wins.
+  * **Thread-safe in-memory index with stat-based invalidation.** All
+    public methods take an internal ``RLock``: concurrent ``get``/``put``
+    from service threads can never tear the stats counters or interleave
+    appends mid-line.  ``get``/``__contains__`` consult only the in-memory
+    index — the JSONL is *never* rescanned per request.  External writers
+    (another process warming the same store) are detected by a cheap
+    ``os.stat`` signature (mtime_ns, size): when the file grew, only the
+    new tail bytes are parsed incrementally; a shrink (external compaction
+    or truncation) triggers a full reload with the usual quarantine
+    behavior.  A trailing line with no newline is treated as an append in
+    flight and left for the next poll, not quarantined.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import threading
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Optional, Union
@@ -149,11 +161,31 @@ class MappingCache:
         self.misses = 0
         self.n_corrupt = 0  # lifetime total, incl. malformed-entry drops
         self.n_quarantined = 0  # corrupt *lines* moved aside at load
-        self._load()
+        self.n_reloads = 0  # external-change reloads (full or incremental)
+        self._lock = threading.RLock()
+        self._sig: Optional[tuple] = None  # (st_mtime_ns, st_size) or None
+        self._offset = 0  # byte offset of JSONL consumed into the index
+        with self._lock:
+            self._load()
 
     # -- persistence -------------------------------------------------------
 
+    def _stat_sig(self) -> Optional[tuple]:
+        try:
+            st = os.stat(self.path)
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
+
     def _load(self) -> None:
+        """Full (re)scan of the JSONL into the in-memory index.
+
+        Caller holds ``self._lock``.  Quarantines corrupt lines and
+        compacts the store atomically, exactly as at construction time.
+        """
+        self._entries.clear()
+        self._offset = 0
+        self._sig = None
         if not self.path.exists():
             return
         surviving: list = []  # raw lines to keep on compaction
@@ -192,39 +224,118 @@ class MappingCache:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)
+        self._sig = self._stat_sig()
+        self._offset = self._sig[1] if self._sig is not None else 0
+
+    def _maybe_reload(self) -> None:
+        """Fold external writes into the index without per-request rescans.
+
+        Caller holds ``self._lock``.  One ``os.stat`` per call; when the
+        signature matches the last consumed state this is a no-op.  Growth
+        is consumed incrementally from the tracked byte offset; shrinkage
+        (external compaction/truncation) or a corrupt complete line forces
+        a full reload (which quarantines + compacts as usual).  Our own
+        ``_append`` advances the signature itself, so same-process puts
+        never pay a reload.
+        """
+        sig = self._stat_sig()
+        if sig == self._sig:
+            return
+        self.n_reloads += 1
+        if sig is None or sig[1] < self._offset:
+            self._load()
+            return
+        with open(self.path, "rb") as f:
+            f.seek(self._offset)
+            tail = f.read()
+        pos = 0
+        while True:
+            nl = tail.find(b"\n", pos)
+            if nl < 0:
+                break  # no newline yet: append in flight, retry next poll
+            raw, pos = tail[pos:nl], nl + 1
+            stripped = raw.strip()
+            if not stripped:
+                continue
+            try:
+                rec = json.loads(stripped.decode("utf-8"))
+                if not isinstance(rec, dict) or any(
+                        k not in rec for k in _REQUIRED):
+                    raise ValueError("missing required fields")
+            except (ValueError, TypeError):
+                # corrupt *complete* line: take the full-reload path so it
+                # is quarantined and compacted exactly like at load time
+                self._load()
+                return
+            if rec["v"] == CACHE_VERSION:
+                self._entries[rec["key"]] = rec
+        self._offset += pos
+        if pos == len(tail):
+            self._sig = sig  # fully caught up
 
     def _append(self, rec: dict) -> None:
         """Durable append: flush + fsync, so a crash after ``put`` returns
         cannot lose the entry and a crash mid-write can at worst leave one
-        torn trailing line (quarantined and compacted away on next load)."""
-        os.makedirs(self.root, exist_ok=True)
-        with open(self.path, "a", encoding="utf-8") as f:
-            f.write(json.dumps(rec, separators=(",", ":")) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+        torn trailing line (quarantined and compacted away on next load).
+        Holds the cache lock so two threads can never interleave lines or
+        tear the tracked offset/signature."""
+        with self._lock:
+            os.makedirs(self.root, exist_ok=True)
+            self._maybe_reload()  # consume any external tail first
+            data = json.dumps(rec, separators=(",", ":")) + "\n"
+            # a crashed external writer can leave a torn, newline-less tail;
+            # appending straight after it would corrupt OUR line too.  Heal
+            # it: terminate the partial line first so it quarantines alone.
+            prefix = ""
+            try:
+                size = os.path.getsize(self.path)
+            except OSError:
+                size = 0
+            if size:
+                with open(self.path, "rb") as rf:
+                    rf.seek(size - 1)
+                    if rf.read(1) != b"\n":
+                        prefix = "\n"
+            with open(self.path, "a", encoding="utf-8") as f:
+                f.write(prefix + data)
+                f.flush()
+                os.fsync(f.fileno())
+            sig = self._stat_sig()
+            nbytes = len(data.encode("utf-8"))
+            if sig is not None and sig[1] == self._offset + nbytes:
+                # the common case: nothing slipped in between — advance the
+                # signature so our own put never triggers a reload
+                self._offset = sig[1]
+                self._sig = sig
+            # else: an external writer interleaved; leave the signature
+            # stale so the next access incrementally consumes the mixed
+            # tail (re-parsing our own line is idempotent: same key, same
+            # record)
 
     # -- API ---------------------------------------------------------------
 
     def get(self, einsum: Einsum, arch: Arch, objective: str,
             prune_partial: bool = True) -> Optional[CacheHit]:
         key = compute_key(einsum, arch, objective, prune_partial)
-        rec = self._entries.get(key)
-        if rec is None:
-            self.misses += 1
-            return None
-        try:
-            hit = CacheHit(result=result_from_wire(rec),
-                           stats=stats_from_wire(rec.get("stats", {})),
-                           t_search=float(rec.get("t_search", 0.0)))
-        except (KeyError, IndexError, TypeError, ValueError):
-            # JSON-valid but structurally malformed entry (hand-edited or
-            # bit-rotted): drop it and fall back to a cold search
-            del self._entries[key]
-            self.n_corrupt += 1
-            self.misses += 1
-            return None
-        self.hits += 1
-        return hit
+        with self._lock:
+            self._maybe_reload()
+            rec = self._entries.get(key)
+            if rec is None:
+                self.misses += 1
+                return None
+            try:
+                hit = CacheHit(result=result_from_wire(rec),
+                               stats=stats_from_wire(rec.get("stats", {})),
+                               t_search=float(rec.get("t_search", 0.0)))
+            except (KeyError, IndexError, TypeError, ValueError):
+                # JSON-valid but structurally malformed entry (hand-edited
+                # or bit-rotted): drop it and fall back to a cold search
+                del self._entries[key]
+                self.n_corrupt += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+            return hit
 
     def put(self, einsum: Einsum, arch: Arch, objective: str,
             result: MappingResult, stats: Optional[MapperStats] = None,
@@ -241,8 +352,9 @@ class MappingCache:
             "stats": stats_to_wire(stats) if stats is not None else {},
             **result_to_wire(result),
         }
-        self._entries[key] = rec
-        self._append(rec)
+        with self._lock:
+            self._entries[key] = rec
+            self._append(rec)
         return key
 
     # -- fused groups ------------------------------------------------------
@@ -252,23 +364,25 @@ class MappingCache:
         """Fused-group lookup; a hit may carry ``result=None`` (the group
         was searched before and admits no fused mapping)."""
         key = compute_group_key(workload, arch, objective, prune_partial)
-        rec = self._entries.get(key)
-        if rec is None:
-            self.misses += 1
-            return None
-        try:
-            result = (None if rec["mapping"] is None
-                      else result_from_wire(rec))
-            hit = CacheHit(result=result,
-                           stats=stats_from_wire(rec.get("stats", {})),
-                           t_search=float(rec.get("t_search", 0.0)))
-        except (KeyError, IndexError, TypeError, ValueError):
-            del self._entries[key]
-            self.n_corrupt += 1
-            self.misses += 1
-            return None
-        self.hits += 1
-        return hit
+        with self._lock:
+            self._maybe_reload()
+            rec = self._entries.get(key)
+            if rec is None:
+                self.misses += 1
+                return None
+            try:
+                result = (None if rec["mapping"] is None
+                          else result_from_wire(rec))
+                hit = CacheHit(result=result,
+                               stats=stats_from_wire(rec.get("stats", {})),
+                               t_search=float(rec.get("t_search", 0.0)))
+            except (KeyError, IndexError, TypeError, ValueError):
+                del self._entries[key]
+                self.n_corrupt += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+            return hit
 
     def put_group(self, workload: FusedWorkload, arch: Arch, objective: str,
                   result: Optional[MappingResult],
@@ -288,17 +402,21 @@ class MappingCache:
                else {"mapping": None, "energy": None, "latency": None,
                      "edp": None}),
         }
-        self._entries[key] = rec
-        self._append(rec)
+        with self._lock:
+            self._entries[key] = rec
+            self._append(rec)
         return key
 
     def clear(self) -> None:
         """Drop all entries, in memory and on disk."""
-        self._entries.clear()
-        if self.path.exists():
-            self.path.unlink()
-        if self.quarantine_path.exists():
-            self.quarantine_path.unlink()
+        with self._lock:
+            self._entries.clear()
+            self._sig = None
+            self._offset = 0
+            if self.path.exists():
+                self.path.unlink()
+            if self.quarantine_path.exists():
+                self.quarantine_path.unlink()
 
     @property
     def hit_rate(self) -> float:
@@ -306,7 +424,11 @@ class MappingCache:
         return self.hits / total if total else 0.0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            self._maybe_reload()
+            return len(self._entries)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._entries
+        with self._lock:
+            self._maybe_reload()
+            return key in self._entries

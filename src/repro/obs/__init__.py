@@ -24,13 +24,14 @@ from .export import (from_chrome, read_jsonl, read_trace, to_chrome,
                      write_chrome, write_jsonl)
 from .report import ProfileReport, PruneAttribution, profile
 from .tracer import (CAT_CACHE, CAT_DRIVER, CAT_DSE, CAT_FUSION,
-                     CAT_INCUMBENT, CAT_PHASE, CAT_STEP, CAT_UNIT,
-                     NULL_TRACER, Event, NullTracer, Tracer, active)
+                     CAT_INCUMBENT, CAT_PHASE, CAT_SERVICE, CAT_STEP,
+                     CAT_UNIT, NULL_TRACER, Event, NullTracer, Tracer,
+                     active)
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Event", "active",
     "CAT_DRIVER", "CAT_PHASE", "CAT_UNIT", "CAT_STEP", "CAT_INCUMBENT",
-    "CAT_CACHE", "CAT_FUSION", "CAT_DSE",
+    "CAT_CACHE", "CAT_FUSION", "CAT_DSE", "CAT_SERVICE",
     "write_jsonl", "read_jsonl", "write_chrome", "to_chrome", "from_chrome",
     "read_trace", "profile", "ProfileReport", "PruneAttribution",
 ]

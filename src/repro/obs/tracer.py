@@ -51,6 +51,8 @@ CAT_BUDGET = "budget"  # anytime-search events: expiry, skipped points
 CAT_FAULT = "fault"  # resilience events: retries, pool restarts,
 #                      serial fallbacks, quarantines, interrupts
 CAT_CHECKPOINT = "checkpoint"  # journal resume hits
+CAT_SERVICE = "service"  # online mapping service: per-request spans, queue
+#                          depth, hit/miss/coalesced/bucketed counters
 
 
 class NullTracer:

@@ -108,3 +108,25 @@ def make_serve_steps(cfg: ModelConfig, mesh: Mesh, specs, cache_abstract,
         donate_argnums=(2,),
     )
     return prefill_step, decode_step, (param_sh, batch_sh, cache_sh, tok_sh)
+
+
+def decode_mapping_plan(cfg: ModelConfig, service, arch, batch: int,
+                        kv_len: int, objective: str = "edp",
+                        deadline_s: Optional[float] = None
+                        ) -> Dict[str, Any]:
+    """Per-decode-step mapping plan from the online mapper.
+
+    Queries the :class:`repro.serve_map.MappingService` for every
+    structurally unique einsum of one decode step at the *exact*
+    ``(batch, kv_len)`` shape — the KV length grows by one every step, so
+    consecutive steps collapse onto the service's shape buckets and only
+    bucket-boundary crossings pay a search.  Returns ``{einsum name:
+    MapResponse}``; each response carries the mapping, its provenance
+    (hit/bucket/search) and a certified ``gap_bound``.
+
+    Deliberately jax-free: safe to call from schedulers and admission
+    controllers without touching the sharded execution path.
+    """
+    return service.map_model(cfg, arch, mode="decode", batch=batch,
+                             seq=kv_len, objective=objective,
+                             deadline_s=deadline_s)
